@@ -1,0 +1,28 @@
+"""Paper claim §2.12/§2.13: pluggable protocols (Ruby/SLICC) and network
+fidelity (Garnet).  The pod analogue: swap collective algorithms per
+simulation and compare predicted times across payloads/participants."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.desim.collectives import ALGORITHMS, best_algorithm
+from repro.core.desim.machine import ClusterModel
+
+
+def run() -> None:
+    m1 = ClusterModel("single", num_pods=1)
+    m1.instantiate()
+    m2 = ClusterModel("multi", num_pods=2)
+    m2.instantiate()
+
+    for nbytes in (1e6, 1e8, 1e10):
+        for n, machine in ((256, m1), (512, m2)):
+            times = {name: alg.time_s("all-reduce", nbytes, n, machine)
+                     for name, alg in ALGORITHMS.items()}
+            best = min(times, key=times.get)
+            for name, t in sorted(times.items()):
+                emit(f"collectives/ar_{nbytes:.0e}B_{n}chips/{name}",
+                     t * 1e6, "best" if name == best else "")
+
+    name, t = best_algorithm("all-to-all", 1e9, 256, m1)
+    emit("collectives/a2a_1e9B_best", t * 1e6, name)

@@ -1,0 +1,44 @@
+"""Paper claim §2.17 (dist-gem5): parallel multi-node simulation with
+quantum-based synchronization.  Measures (a) the in-process QuantumSync
+engine's barrier overhead vs quantum length, (b) DES-predicted step
+time vs pod count for a fixed per-pod workload (weak scaling: the
+hierarchical DCN all-reduce is the scaling cost)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_us
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.trace import analytic_trace
+from repro.core.events import EventQueue, QuantumSync
+
+
+def run() -> None:
+    # (a) engine: 4 queues, 10k events each, quantum sweep
+    for quantum in (100, 1_000, 10_000):
+        def sim():
+            queues = [EventQueue(f"pod{i}") for i in range(4)]
+            for q in queues:
+                for t in range(0, 100_000, 50):
+                    q.schedule(lambda: None, t)
+            QuantumSync(queues, quantum).run(100_000)
+
+        t = time_us(sim, iters=2)
+        def barriers(quantum=quantum):
+            return 100_000 // quantum
+        emit(f"distgem5/engine_q{quantum}", t,
+             f"barriers={barriers()} events=8000")
+
+    # (b) weak scaling: per-pod layer work fixed; DCN AR grows with pods
+    layer_colls = [{"kind": "all-reduce", "bytes": 5e8, "participants": 256}]
+    for pods in (1, 2, 4, 8):
+        m = ClusterModel("c", num_pods=pods)
+        m.instantiate()
+        tail = ([] if pods == 1 else
+                [{"kind": "all-reduce", "bytes": 2e9,
+                  "participants": 256 * pods, "scope": "dcn"}])
+        tr = analytic_trace("step", 32, 5e13, 5e10, layer_colls,
+                            tail_collectives=tail, overlap=False)
+        res = TraceExecutor(m).execute(tr)
+        emit(f"distgem5/step_{pods}pods", res.makespan_s * 1e6,
+             f"exposed_coll_s={res.exposed_collective_s:.3f}")

@@ -1,0 +1,70 @@
+"""Paper claim §1: 'design-space exploration' — THE canonical gem5 use
+case.  The DES sweeps system parameters (collective algorithm, overlap,
+straggler mitigation, pod count) over a workload trace derived from a
+real dry-run artifact (if present) and reports the best configuration;
+thousands of variants evaluate in milliseconds each, which is the whole
+point of simulation-driven design."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, time_us
+from repro.core.desim.collectives import ALGORITHMS
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.trace import analytic_trace
+
+
+def _workload():
+    """Layer costs from a real dry-run artifact when available."""
+    cands = sorted(glob.glob(
+        "results/dryrun/stablelm-1.6b__train_4k__single.json"))
+    if cands:
+        d = json.load(open(cands[0]))
+        r = d["roofline"]
+        L = 24
+        return {
+            "layers": L,
+            "flops": r["hlo_flops_per_device"] / L,
+            "bytes": r["hlo_bytes_per_device"] / L,
+            "coll": r["collective_bytes_per_device"] / L,
+            "src": "dryrun artifact",
+        }
+    return {"layers": 24, "flops": 2e14, "bytes": 2e11, "coll": 5e8,
+            "src": "analytic"}
+
+
+def run() -> None:
+    w = _workload()
+    configs = []
+    for alg in ALGORITHMS:
+        for overlap in (False, True):
+            for slow in (None, [1.0, 1.3]):
+                for pods in (1, 2):
+                    configs.append((alg, overlap, slow, pods))
+
+    def evaluate(alg, overlap, slow, pods):
+        m = ClusterModel("m", num_pods=pods)
+        m.instantiate()
+        colls = [{"kind": "all-reduce", "bytes": w["coll"] * 256,
+                  "participants": 256}]
+        tr = analytic_trace("w", w["layers"], w["flops"], w["bytes"],
+                            colls, overlap=overlap)
+        sl = (slow * pods)[:pods] if slow else None
+        return TraceExecutor(m, algorithm=alg,
+                             straggler_slowdowns=sl).execute(tr).makespan_s
+
+    t = time_us(lambda: [evaluate(*c) for c in configs], iters=1)
+    results = sorted((evaluate(*c), c) for c in configs)
+    best_t, best_c = results[0]
+    worst_t, worst_c = results[-1]
+    emit("dse/sweep", t / len(configs),
+         f"{len(configs)}_configs src={w['src']}")
+    emit("dse/best", best_t * 1e6,
+         f"alg={best_c[0]} overlap={best_c[1]} pods={best_c[3]}")
+    emit("dse/worst", worst_t * 1e6,
+         f"alg={worst_c[0]} overlap={worst_c[1]} "
+         f"span={worst_t / best_t:.2f}x")

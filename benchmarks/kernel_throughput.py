@@ -1,0 +1,94 @@
+"""Substrate claim: Pallas kernels vs jnp oracle.  Reports interpret-mode
+µs/call (correctness-path timing) and the MODELED TPU v5e time from the
+kernel's HBM-byte/FLOP footprint vs the XLA path's footprint — the
+quantity the dry-run roofline actually scores."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def _modeled(flops, nbytes):
+    return max(flops / PEAK, nbytes / HBM)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: b=1, s=1024, h=4, d=128
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    b, s, h, d = 1, 1024, 4, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    t_k = time_us(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, interpret=True)), iters=2)
+    t_r = time_us(lambda: jax.block_until_ready(
+        jax.jit(attention_ref)(q, k, v)), iters=2)
+    fl = 4 * b * h * s * s * d / 2            # causal
+    bytes_kernel = 4 * b * s * h * d * 4      # q,k,v,o once
+    bytes_xla = bytes_kernel + 6 * b * h * s * s * 4 / 2  # score passes
+    emit("kernel/flash_attention_interp", t_k,
+         f"ref_jnp={t_r:.0f}us modeled_tpu={_modeled(fl, bytes_kernel)*1e6:.1f}us"
+         f" xla_path={_modeled(fl, bytes_xla)*1e6:.1f}us")
+
+    # wkv6: b=1, s=512, h=4, n=64
+    from repro.kernels.rwkv6_wkv.ops import wkv6
+    from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+    b, s, h, n = 1, 512, 4, 64
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, n), jnp.float32)
+    kk = jax.random.normal(ks[1], (b, s, h, n), jnp.float32)
+    vv = jax.random.normal(ks[2], (b, s, h, n), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n)) - 1)
+    u = jax.random.normal(ks[4], (h, n), jnp.float32) * 0.5
+    t_k = time_us(lambda: jax.block_until_ready(
+        wkv6(r, kk, vv, w, u, interpret=True)), iters=2)
+    t_r = time_us(lambda: jax.block_until_ready(
+        jax.jit(lambda *a: wkv6_ref(*a)[0])(r, kk, vv, w, u)), iters=2)
+    L = 64
+    fl = b * h * (s / L) * (2 * L * n * n * 2 + 2 * L * L * n * 2)
+    nbytes = 5 * b * s * h * n * 4
+    emit("kernel/rwkv6_wkv_interp", t_k,
+         f"ref_seq_scan={t_r:.0f}us modeled_tpu={_modeled(fl, nbytes)*1e6:.1f}us")
+
+    # moe expert mlp: g=1,e=4,c=256,d=256,f=512
+    from repro.kernels.moe_mlp.ops import expert_mlp
+    from repro.kernels.moe_mlp.ref import expert_mlp_ref
+    g, e, c, dd, f = 1, 4, 256, 256, 512
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (g, e, c, dd), jnp.float32)
+    wi = jax.random.normal(ks[1], (e, dd, f)) / jnp.sqrt(dd * 1.0)
+    wg = jax.random.normal(ks[2], (e, dd, f)) / jnp.sqrt(dd * 1.0)
+    wo = jax.random.normal(ks[3], (e, f, dd)) / jnp.sqrt(f * 1.0)
+    t_k = time_us(lambda: jax.block_until_ready(
+        expert_mlp(x, wi, wg, wo, interpret=True)), iters=2)
+    t_r = time_us(lambda: jax.block_until_ready(
+        jax.jit(expert_mlp_ref)(x, wi, wg, wo)), iters=2)
+    fl = g * e * c * (3 * 2 * dd * f)
+    b_kernel = (g * e * c * dd * 2 + 3 * e * dd * f) * 4
+    b_xla = b_kernel + 3 * g * e * c * f * 4   # h/u round-trips
+    emit("kernel/moe_mlp_interp", t_k,
+         f"ref={t_r:.0f}us modeled_tpu={_modeled(fl, b_kernel)*1e6:.1f}us"
+         f" xla_path={_modeled(fl, b_xla)*1e6:.1f}us")
+
+    # quantize: 1M elements
+    from repro.kernels.quantize.ops import quantize
+    from repro.kernels.quantize.ref import quantize_ref
+    xq = jax.random.normal(key, (1 << 20,), jnp.float32)
+    t_k = time_us(lambda: jax.block_until_ready(
+        quantize(xq, interpret=True)[0]), iters=2)
+    blocks = xq.reshape(-1, 256)
+    t_r = time_us(lambda: jax.block_until_ready(
+        jax.jit(quantize_ref)(blocks)[0]), iters=2)
+    nbytes = xq.size * 5
+    emit("kernel/quantize_interp", t_k,
+         f"ref={t_r:.0f}us modeled_tpu={nbytes / HBM * 1e6:.1f}us")

@@ -1,0 +1,64 @@
+"""§Roofline table generator: renders the per-(arch x shape) roofline
+terms from the dry-run artifacts (single-pod mesh, per assignment) into
+markdown for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+from benchmarks.common import emit
+
+HEADER = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| MODEL/HLO flops | roofline frac | fits 16GB | one-line fix |")
+SEP = "|---" * 10 + "|"
+
+FIX_HINTS = {
+    "memory": "cut activation round-trips (flash-attn kernel / fusion)",
+    "collective": "reshard to cut all-gathers; overlap with compute",
+    "compute": "at compute roofline: increase MXU utilization/efficiency",
+}
+
+
+def render(summary_path: str = "results/dryrun/summary.json",
+           out_path: Optional[str] = "results/roofline.md") -> str:
+    rows = json.load(open(summary_path))
+    lines: List[str] = [HEADER, SEP]
+    for r in rows:
+        if r.get("mesh") != "single":
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | skipped: sub-quadratic n/a |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED "
+                         f"| | | | | | | {r.get('error', '')[:40]} |")
+            continue
+        rl = r["roofline"]
+        # roofline fraction: useful model flops time / bound time
+        t_model = (r["model_flops_global"] / r["mesh_desc"]["devices"]
+                   / 197e12)
+        frac = t_model / rl["bound_s"] if rl["bound_s"] else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} "
+            f"| {rl['memory_s']:.4f} | {rl['collective_s']:.4f} "
+            f"| **{rl['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {frac:.3f} | {'yes' if r['fits_hbm'] else 'NO'} "
+            f"| {FIX_HINTS[rl['dominant']]} |")
+    text = "\n".join(lines)
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+    return text
+
+
+def run() -> None:
+    if not os.path.exists("results/dryrun/summary.json"):
+        emit("roofline/table", 0.0, "no dryrun artifacts; run launch.dryrun")
+        return
+    text = render()
+    n = text.count("\n") - 1
+    emit("roofline/table", 0.0, f"{n}_rows -> results/roofline.md")

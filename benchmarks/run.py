@@ -1,0 +1,49 @@
+"""Benchmark driver: one benchmark per gem5-20 paper claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's
+docstring for the claim it reproduces).
+
+  python -m benchmarks.run            # all
+  python -m benchmarks.run fidelity   # substring filter
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
+                        distgem5_scaling, elastic_trace, fidelity_spectrum,
+                        kernel_throughput, roofline)
+
+BENCHES = [
+    ("fidelity_spectrum", fidelity_spectrum.run),
+    ("elastic_trace", elastic_trace.run),
+    ("collective_protocols", collective_protocols.run),
+    ("distgem5_scaling", distgem5_scaling.run),
+    ("checkpoint_fork", checkpoint_fork.run),
+    ("kernel_throughput", kernel_throughput.run),
+    ("dse_sweep", dse_sweep.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    pat = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES:
+        if pat and pat not in name:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

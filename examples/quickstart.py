@@ -1,0 +1,56 @@
+"""Quickstart: the g5x workflow in one page.
+
+1. pick an architecture config     (gem5: choose known-good config)
+2. build the model + train step    (gem5: compose SimObjects in Python)
+3. train a few steps for real      (gem5: KVM/native fidelity)
+4. dry-run lower+compile           (gem5: atomic fidelity)
+5. replay the compiled step on a
+   parameterized TPU machine model (gem5: detailed/O3 fidelity)
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke
+from repro.configs.base import ShapeConfig
+from repro.core.fidelity import DesimBackend, DryRunBackend, StepProgram
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.train import TrainOptions, build_train_step, init_train_state
+
+# -- 1. config --------------------------------------------------------------
+cfg = smoke(get_config("olmoe-1b-7b"))           # reduced MoE config
+shape = ShapeConfig("quick", seq_len=32, global_batch=4, kind="train")
+print(f"arch={cfg.name} layers={cfg.n_layers} experts={cfg.n_experts}")
+
+# -- 2. model + step ---------------------------------------------------------
+model = build_model(cfg)
+opts = TrainOptions(peak_lr=5e-3, warmup=5, total_steps=30, chunk=16)
+state = init_train_state(model, jax.random.PRNGKey(0), opts)
+train_step = jax.jit(build_train_step(model, opts))
+
+# -- 3. native fidelity: actually train --------------------------------------
+pipe = SyntheticPipeline(cfg, shape)
+for step_i in range(30):
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(step_i).items()}
+    state, metrics = train_step(state, batch)
+    if step_i % 10 == 0:
+        print(f"step {step_i:3d} loss={float(metrics['loss']):.3f} "
+              f"aux={float(metrics['aux_loss']):.3f}")
+print(f"final loss={float(metrics['loss']):.3f}")
+
+# -- 4. dryrun fidelity: compiled-artifact analysis ---------------------------
+prog = StepProgram(
+    "quick_train", build_train_step(model, opts),
+    (jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+     {k: jax.ShapeDtypeStruct(v.shape, jnp.asarray(v).dtype)
+      for k, v in pipe.batch(0).items()}))
+rep = DryRunBackend().run(prog)
+print(f"dryrun: flops/step={rep.flops:.2e} hbm_bytes={rep.bytes_accessed:.2e}")
+
+# -- 5. desim fidelity: predicted step time on a TPU machine model ------------
+rep2 = DesimBackend().run(prog, dryrun_report=rep)
+print(f"desim: predicted TPU-pod step time = {rep2.predicted_step_s:.3e} s")
+print("quickstart OK")

@@ -1,0 +1,46 @@
+"""Batched serving example (assignment deliverable b): continuous
+batching over mixed-length requests on a small model, verifying the
+batched outputs match sequential greedy decoding.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import build_model
+from repro.serve import BatchServer, Request
+
+cfg = smoke(get_config("mixtral-8x22b"))      # MoE + sliding window
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+srv = BatchServer(model=model, params=params, slots=3, seq_capacity=48)
+srv.instantiate()
+rng = np.random.default_rng(0)
+reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                           int(rng.integers(2, 10))),
+                max_new_tokens=6) for i in range(7)]
+done = srv.serve(reqs)
+
+# verify against sequential decoding for one request
+req = done[0]
+logits, cache = jax.jit(lambda p, b: model.prefill(p, b, seq_capacity=48))(
+    params, {"tokens": jnp.asarray(req.prompt[None])})
+toks = [int(jnp.argmax(logits[0, -1].astype(jnp.float32)))]
+cur = len(req.prompt)
+for _ in range(len(req.output) - 1):
+    logits, cache = jax.jit(
+        lambda p, t, c, cl: model.decode(p, {"tokens": t}, c, cl))(
+            params, jnp.asarray([[toks[-1]]]), cache,
+            jnp.asarray(cur, jnp.int32))
+    toks.append(int(jnp.argmax(logits[0, -1].astype(jnp.float32))))
+    cur += 1
+assert req.output == toks, (req.output, toks)
+print(f"served {len(done)} requests, "
+      f"{int(srv.s_tokens.value())} tokens, "
+      f"{srv.s_throughput.value():.2f} tokens/decode-step")
+print("batched output == sequential greedy decode for request 0")
+print("serve_batch OK")

@@ -1,0 +1,59 @@
+"""End-to-end driver (assignment deliverable b): train a ~100M-param
+dense model for a few hundred steps with checkpointing, failure
+recovery, and stats — the full production loop at CPU scale.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.train import TrainOptions, build_train_step, init_train_state
+from repro.train.trainer import SimulatedFailure, Trainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--dim", type=int, default=512)
+args = ap.parse_args()
+
+# ~100M params: 8 layers x d=512 (d_ff 1536) + 32k vocab
+base = smoke(get_config("stablelm-1.6b"))
+cfg = dataclasses.replace(
+    base, n_layers=8, d_model=args.dim, d_ff=3 * args.dim, d_head=64,
+    n_heads=args.dim // 64, n_kv_heads=args.dim // 64, vocab_size=32768)
+model = build_model(cfg)
+n_params = sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(model.param_specs()[0]))
+print(f"model: {cfg.n_layers}L d={cfg.d_model} params={n_params/1e6:.1f}M")
+
+shape = ShapeConfig("e2e", seq_len=128, global_batch=8, kind="train")
+opts = TrainOptions(peak_lr=3e-3, warmup=20, total_steps=args.steps,
+                    chunk=128)
+state = init_train_state(model, jax.random.PRNGKey(0), opts)
+step = build_train_step(model, opts)
+pipe = SyntheticPipeline(cfg, shape, seed=1)
+
+with tempfile.TemporaryDirectory() as d:
+    tr = Trainer(model=model, train_step=step, pipeline=pipe, state=state,
+                 ckpt_dir=os.path.join(d, "ckpt"), ckpt_interval=50,
+                 heartbeat_path=os.path.join(d, "hb.json"))
+    tr.instantiate()
+    # inject one failure mid-run: the trainer must restore and continue
+    res = tr.run(args.steps,
+                 fail_at={args.steps // 2: SimulatedFailure("injected")})
+    h = res["history"]
+    print(f"loss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} over "
+          f"{res['final_step']} steps "
+          f"(recovered {int(tr.s_failures.value())} failure)")
+    assert h[-1]["loss"] < h[0]["loss"], "training must reduce loss"
+    print(tr.stats.dump_text())
+print("train_e2e OK")

@@ -1,0 +1,149 @@
+"""Sharded, atomic, async checkpointing with resharding restore.
+
+The gem5 checkpoint/restore pillar (§1.3, §2.7, §2.12.1) applied to
+training state:
+
+* **Atomic**: state is serialized into ``<dir>/step_K.tmp`` and renamed
+  to ``<dir>/step_K`` only when complete — a crash mid-save can never
+  corrupt the latest checkpoint (gem5's drain-then-serialize rule).
+* **Async**: serialization runs on a background thread; ``save()``
+  returns after snapshotting device arrays to host (the jax.device_get
+  is the only synchronous part).  ``wait()`` joins before exit / next
+  save.
+* **Sharded layout**: one ``.npy`` per pytree leaf, keyed by the flat
+  path, plus a JSON manifest (shapes, dtypes, step, keep-N policy).
+* **Resharding restore**: ``restore(..., shardings=...)`` device_puts
+  each leaf with *new* shardings — a checkpoint written on any mesh
+  restores onto any other mesh (elastic re-mesh after failures).
+* **keep_n**: old checkpoints are pruned (never the newest).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+        self.save_seconds = 0.0
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, state: Any, step: int, extra: Optional[Dict] = None
+             ) -> str:
+        self.wait()
+        host_state = jax.device_get(state)    # snapshot (sync, cheap on CPU)
+        treedef = jax.tree.structure(state)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+
+        def _write():
+            t0 = time.perf_counter()
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat = _flatten(host_state)
+            manifest = {"step": step, "leaves": {}, "extra": extra or {},
+                        "treedef": str(treedef)}
+            for key, leaf in flat.items():
+                arr = np.asarray(leaf)
+                fname = key.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"][key] = {
+                    "file": fname, "shape": list(arr.shape),
+                    "dtype": str(arr.dtype)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)              # atomic publish
+            self._prune()
+            self.saves += 1
+            self.save_seconds += time.perf_counter() - t0
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+        return final
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self) -> None:
+        steps = self.available_steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def available_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for resharded placement on a (new) mesh."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_flat = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(paths))
+        leaves = []
+        for (path, leaf), shard in zip(paths, shard_flat):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            info = manifest["leaves"][key]
+            arr = np.load(os.path.join(d, info["file"]))
+            want_dtype = getattr(leaf, "dtype", arr.dtype)
+            arr = arr.astype(want_dtype)
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

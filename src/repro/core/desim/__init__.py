@@ -1,0 +1,14 @@
+"""Discrete-event timing models of TPU pods (gem5's detailed models).
+
+This package is the g5x analogue of gem5's model library: parameterized
+machine components (``machine``), a pluggable network/collective layer
+(``network``, ``collectives`` — the Ruby/Garnet analogue), elastic
+execution traces (``trace`` — §2.8), and the event-driven executor that
+replays a trace on a machine (``executor``), including dist-gem5-style
+quantum-synchronized multi-pod simulation (§2.17).
+"""
+
+from repro.core.desim.machine import (  # noqa: F401
+    ChipModel, PodModel, ClusterModel, TPU_V5E, default_cluster)
+from repro.core.desim.trace import HloTrace, TraceOp  # noqa: F401
+from repro.core.desim.executor import TraceExecutor  # noqa: F401

@@ -1,0 +1,168 @@
+"""Event-driven trace replay on a machine model.
+
+This is where the pillars meet (the gem5 'detailed CPU + Ruby + Garnet'
+configuration): an elastic trace (trace.py) is replayed on a
+parameterized cluster (machine.py) through pluggable collective
+algorithms (collectives.py), driven by the deterministic event engine
+(core/events.py), with dist-gem5 quantum synchronization between pods
+(§2.17) and straggler injection (per-chip ``slowdown``).
+
+Timing semantics per chip:
+
+* ``compute`` ops serialize on the chip's compute resource at the
+  roofline time ``max(flops/peak, bytes/hbm_bw) * slowdown``.
+* collectives serialize on the wire resource of their scope (ici/dcn);
+  an ``overlap=True`` collective occupies the wire but does NOT block
+  the next compute op unless a later op depends on it — this models
+  async collectives / comm-compute overlap, the distributed-optimization
+  trick the train step is structured around.
+* cross-pod (dcn) collectives only complete at a quantum boundary,
+  reproducing dist-gem5's quantum-based synchronization error model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.desim.collectives import get_algorithm
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.trace import HloTrace, TraceOp
+
+TICKS_PER_S = 1_000_000_000  # 1 tick = 1 ns
+
+
+@dataclass
+class ExecResult:
+    makespan_s: float
+    compute_s: float
+    collective_s: float
+    exposed_collective_s: float     # collective time NOT hidden by overlap
+    per_chip_busy_s: List[float]
+    events: int
+    timeline: List[Dict] = field(default_factory=list)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "makespan_s": self.makespan_s,
+            "compute_s": self.compute_s,
+            "collective_s": self.collective_s,
+            "exposed_collective_s": self.exposed_collective_s,
+            "overlap_efficiency": (
+                1.0 - self.exposed_collective_s / self.collective_s
+                if self.collective_s > 0 else 1.0),
+        }
+
+
+class TraceExecutor:
+    """Replays an HloTrace on a ClusterModel.
+
+    The model is SPMD: every chip executes the same trace (that is what
+    a pjit program is), so we simulate one *representative chip per pod*
+    plus shared wire resources, with stragglers making pods
+    heterogeneous.  This keeps the DES cost O(ops x pods), which is what
+    lets DSE sweeps run thousands of variants (the gem5 use case).
+    """
+
+    def __init__(self, machine: ClusterModel, algorithm: str = "torus2d",
+                 record_timeline: bool = False,
+                 straggler_slowdowns: Optional[List[float]] = None):
+        self.machine = machine
+        self.alg = get_algorithm(algorithm)
+        self.dcn_alg = get_algorithm("hierarchical")
+        self.record_timeline = record_timeline
+        pods = machine.num_pods
+        self.slow = (straggler_slowdowns or [1.0] * pods)[:pods]
+        while len(self.slow) < pods:
+            self.slow.append(1.0)
+
+    # ------------------------------------------------------------------
+    def execute(self, trace: HloTrace) -> ExecResult:
+        m = self.machine
+        pods = m.num_pods
+        chips_per_pod = m.pod.num_chips
+        quantum_s = m.quantum_ns / TICKS_PER_S
+
+        # per-pod resource clocks (ns are overkill here; float seconds
+        # with deterministic op order gives the same result as the tick
+        # engine for a linear trace — the tick engine is used by the
+        # network-level simulation and QuantumSync tests)
+        compute_free = [0.0] * pods
+        wire_free = [0.0] * pods          # ici wire per pod
+        dcn_free = 0.0                    # shared dcn fabric
+        op_done: List[List[float]] = [[0.0] * len(trace.ops)
+                                      for _ in range(pods)]
+
+        compute_total = 0.0
+        coll_total = 0.0
+        exposed_total = 0.0
+        timeline: List[Dict] = []
+        events = 0
+
+        for idx, op in enumerate(trace.ops):
+            for pod in range(pods):
+                dep_ready = max((op_done[pod][d] for d in op.deps),
+                                default=0.0)
+                if op.kind == "compute":
+                    dur = m.pod.chip.compute_time_s(op.flops, op.bytes)
+                    dur *= self.slow[pod]
+                    start = max(dep_ready, compute_free[pod])
+                    end = start + dur
+                    compute_free[pod] = end
+                    if pod == 0:
+                        compute_total += dur
+                else:
+                    participants = op.participants or chips_per_pod
+                    if op.scope == "dcn" or participants > chips_per_pod:
+                        dur = self.dcn_alg.time_s(
+                            op.kind, op.coll_bytes, participants, m)
+                        start = max(dep_ready, dcn_free)
+                        end = start + dur
+                        # dist-gem5 quantum rounding on cross-pod traffic
+                        if quantum_s > 0:
+                            q = quantum_s
+                            end = ((end + q - 1e-18) // q) * q
+                        dcn_free = end
+                    else:
+                        dur = self.alg.time_s(
+                            op.kind, op.coll_bytes, participants, m)
+                        start = max(dep_ready, wire_free[pod])
+                        end = start + dur
+                        wire_free[pod] = end
+                    if pod == 0:
+                        coll_total += dur
+                        # exposed = time the compute resource sat idle
+                        # waiting for this collective
+                        if not op.overlap:
+                            exposed_total += max(0.0, end - max(
+                                compute_free[pod], dep_ready))
+                op_done[pod][idx] = end
+                events += 1
+                if self.record_timeline and pod == 0:
+                    timeline.append({"op": op.name or op.kind,
+                                     "kind": op.kind, "start": start,
+                                     "end": end})
+
+        # cross-pod barrier at step end (gradient sync / pjit semantics):
+        # the step completes when the slowest pod completes.
+        per_pod_end = [max(compute_free[p], wire_free[p]) for p in range(pods)]
+        makespan = max(max(per_pod_end), dcn_free)
+
+        return ExecResult(
+            makespan_s=makespan,
+            compute_s=compute_total,
+            collective_s=coll_total,
+            exposed_collective_s=min(exposed_total, coll_total),
+            per_chip_busy_s=per_pod_end,
+            events=events,
+            timeline=timeline,
+        )
+
+
+def predict_step_time(machine: ClusterModel, trace: HloTrace,
+                      algorithm: str = "torus2d",
+                      straggler_slowdowns: Optional[List[float]] = None
+                      ) -> float:
+    return TraceExecutor(machine, algorithm=algorithm,
+                         straggler_slowdowns=straggler_slowdowns
+                         ).execute(trace).makespan_s

@@ -1,0 +1,460 @@
+"""Loop-aware cost analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while``
+body ONCE, ignoring the trip count (verified experimentally: a
+10-iteration ``lax.scan`` reports exactly 1/10th of the unrolled
+FLOPs).  Every g5x model scans over layers, so cost_analysis would
+undercount a 95-layer model by ~95x — and, worse, would miss 95/96ths
+of the FSDP all-gather bytes that live inside the scanned layer body.
+
+This module re-derives the three roofline inputs from the compiled
+module text with correct loop multipliers:
+
+  * flops            — dot (2*M*N*K from output shape x contraction
+                       dims), elementwise/reduce approximations, fused
+                       computations recursed, while bodies x trip count.
+  * bytes accessed   — operand+output bytes at *fusion granularity*
+                       (internals of a fusion stay in registers/VMEM,
+                       matching XLA's own memory model), x trip count.
+  * collective bytes — per collective kind, operand bytes (these are
+                       LOCAL/per-device shard bytes in the post-SPMD
+                       module), x trip count.
+
+All results are PER-DEVICE (the compiled module is the per-partition
+program).  Trip counts are parsed from the while condition's integer
+constant (scan loops compare the induction variable against a
+constant); the heuristic is validated against unrolled references in
+tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# opcodes that move no data / cost nothing
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "opt-barrier", "partition-id",
+             "replica-id"}
+
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "not", "xor", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "cosine", "sine",
+    "atan2", "clamp", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "exponential-minus-one", "log-plus-one",
+    "logistic", "cbrt", "erf",
+}
+
+
+def shape_elems_bytes(type_str: str) -> Tuple[float, float]:
+    """(elements, bytes) totals over all tensors in an HLO type string."""
+    elems = 0.0
+    nbytes = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        per = _DTYPE_BYTES.get(dtype)
+        if per is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * per
+    return elems, nbytes
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str
+    args: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    param_types: Dict[str, str]
+    instrs: List[Instr] = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas at paren/brace depth 0 (tuple-typed params)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9\[\]{},\s]*?))\s*"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_REF = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    """Parse computations.  Returns ({name: comp}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = _COMP_HDR.match(stripped.lstrip("%"))
+                if m:
+                    name, params = m.group(1), m.group(2)
+                    ptypes = {}
+                    for p in _split_top_level(params):
+                        p = p.strip()
+                        if ":" in p:
+                            pname, ptype = p.split(":", 1)
+                            ptypes[pname.strip().lstrip("%")] = ptype.strip()
+                    cur = Computation(name, ptypes)
+                    if stripped.startswith("ENTRY"):
+                        entry = name
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rettype, opcode, rest = m.groups()
+        # split call args from attrs: find matching close paren
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = _REF.findall(rest[:end])
+        attrs = rest[end + 1:]
+        cur.instrs.append(Instr(name, opcode, rettype.strip(), args, attrs,
+                                line))
+    return comps, entry
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: float = 0.0
+    # bytes moved by pure data movement (copy / copy-only fusions):
+    # real on the CPU backend, aliased away by TPU while-carry buffer
+    # assignment -> reported separately so the roofline can show both.
+    copy_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    top_dots: List[Tuple[float, str]] = field(default_factory=list)
+    top_bytes: List[Tuple[float, str]] = field(default_factory=list)
+
+    def note_bytes(self, nbytes: float, label: str) -> None:
+        self.top_bytes.append((nbytes, label))
+        self.top_bytes = sorted(self.top_bytes, reverse=True)[:12]
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.copy_bytes += other.copy_bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collectives.items():
+            s = self.collectives.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            s["count"] += v["count"] * mult
+            s["bytes"] += v["bytes"] * mult
+        self.top_dots.extend(
+            (f * mult, d) for f, d in other.top_dots)
+        self.top_dots = sorted(self.top_dots, reverse=True)[:8]
+        self.top_bytes.extend(
+            (b * mult, d) for b, d in other.top_bytes)
+        self.top_bytes = sorted(self.top_bytes, reverse=True)[:12]
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._cache: Dict[Tuple[str, bool], Cost] = {}
+        self.while_trips: List[Tuple[str, int]] = []
+
+    # -- trip count ------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for ins in comp.instrs:
+            for m in re.finditer(r"constant\((\d+)\)", ins.raw):
+                best = max(best, int(m.group(1)))
+        # fused compare: constants may live in a called computation
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if cm and cm.group(1) in self.comps:
+                    for ins2 in self.comps[cm.group(1)].instrs:
+                        for m in re.finditer(r"constant\((\d+)\)", ins2.raw):
+                            best = max(best, int(m.group(1)))
+        return best
+
+    def _is_pure_copy(self, comp_name: str) -> bool:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return False
+        movement = {"parameter", "copy", "bitcast", "tuple",
+                    "get-tuple-element", "reshape", "transpose"}
+        return all(i.opcode in movement for i in comp.instrs)
+
+    # -- fusion I/O bytes ---------------------------------------------------
+    def _fusion_io_bytes(self, comp_name: str, types_at_site: Dict[str, str],
+                         ins: Instr) -> float:
+        """HBM bytes moved by one fusion call, slice-aware.
+
+        A fusion that dynamic-slices a big loop-invariant array (the
+        stacked scanned weights) only READS the slice; charging the full
+        operand would overcount a 95-layer scan by 95x.  Rule: a fusion
+        parameter consumed *only* by dynamic-slice/gather ops is charged
+        the sum of those ops' outputs; otherwise the full parameter.
+        A fusion whose root is dynamic-update-slice writes only the
+        update region (in-place semantics), not the whole buffer.
+        """
+        comp = self.comps.get(comp_name)
+        _, out_bytes = shape_elems_bytes(ins.out_type)
+        if comp is None:
+            return out_bytes + sum(
+                shape_elems_bytes(types_at_site.get(a, ""))[1]
+                for a in ins.args)
+        # parameter order
+        param_order: List[str] = []
+        for i2 in comp.instrs:
+            if i2.opcode == "parameter":
+                param_order.append(i2.name)
+        reads = 0.0
+        for idx, pname in enumerate(param_order):
+            arg = ins.args[idx] if idx < len(ins.args) else None
+            full = shape_elems_bytes(
+                types_at_site.get(arg, comp.param_types.get(pname, "")))[1]
+            consumers = [i2 for i2 in comp.instrs if pname in i2.args]
+            if consumers and all(i2.opcode in ("dynamic-slice", "gather")
+                                 or (i2.opcode == "dynamic-update-slice"
+                                     and i2.args and i2.args[0] == pname)
+                                 for i2 in consumers):
+                sliced = 0.0
+                for i2 in consumers:
+                    if i2.opcode == "dynamic-update-slice":
+                        continue        # pass-through buffer, charged below
+                    sliced += shape_elems_bytes(i2.out_type)[1]
+                reads += min(sliced, full)
+            else:
+                reads += full
+        # root DUS: write = update region only
+        root = comp.instrs[-1] if comp.instrs else None
+        if root is not None:
+            chain = root
+            # peel pure per-element wrappers to find a DUS root (the
+            # decode cache-carry pattern fuses as convert(dus(...)))
+            local = {i2.name: i2 for i2 in comp.instrs}
+            for _ in range(4):
+                if chain.opcode in ("bitcast", "copy", "convert") \
+                        and chain.args:
+                    nxt = local.get(chain.args[0])
+                    if nxt is None:
+                        break
+                    chain = nxt
+            if chain.opcode == "dynamic-update-slice" and len(chain.args) > 1:
+                upd = local.get(chain.args[1])
+                if upd is not None:
+                    out_bytes = shape_elems_bytes(upd.out_type)[1]
+                else:
+                    out_bytes = shape_elems_bytes(
+                        comp.param_types.get(chain.args[1], ""))[1]
+        return reads + out_bytes
+
+    # -- per-instruction flops -------------------------------------------
+    def _dot_flops(self, ins: Instr, types: Dict[str, str]) -> float:
+        out_elems, _ = shape_elems_bytes(ins.out_type)
+        lhs_type = types.get(ins.args[0], "") if ins.args else ""
+        lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([0-9, ]*)\}", ins.attrs)
+        k = 1
+        if m and lhs_dims:
+            for d in m.group(1).split(","):
+                d = d.strip()
+                if d:
+                    idx = int(d)
+                    if idx < len(lhs_dims):
+                        k *= lhs_dims[idx]
+        return 2.0 * out_elems * k
+
+    # -- computation cost ---------------------------------------------------
+    def comp_cost(self, name: str, fused: bool) -> Cost:
+        """fused=True: computation runs inside a fusion -> its internal
+        ops contribute flops but NOT memory traffic."""
+        key = (name, fused)
+        if key in self._cache:
+            return self._cache[key]
+        self._cache[key] = Cost()          # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return Cost()
+        types: Dict[str, str] = dict(comp.param_types)
+        total = Cost()
+        for ins in comp.instrs:
+            types[ins.name] = ins.out_type
+            op = ins.opcode
+            out_elems, out_bytes = shape_elems_bytes(ins.out_type)
+            arg_bytes = sum(shape_elems_bytes(types.get(a, ""))[1]
+                            for a in ins.args)
+
+            if op in _FREE_OPS:
+                continue
+
+            # control flow / calls ------------------------------------
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                # XLA annotates scans with known_trip_count
+                ktc = re.search(r'known_trip_count[^0-9]*(\d+)', ins.raw)
+                if ktc:
+                    trips = int(ktc.group(1))
+                else:
+                    trips = self.trip_count(cm.group(1)) if cm else 1
+                self.while_trips.append((ins.name, trips))
+                if bm:
+                    total.add(self.comp_cost(bm.group(1), fused), trips)
+                continue
+            if op in ("call", "async-start"):
+                cm = re.search(r"(?:calls|called_computation)=%?([\w.\-]+)",
+                               ins.attrs)
+                if cm:
+                    total.add(self.comp_cost(cm.group(1), fused))
+                continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      ins.attrs)
+                names = _REF.findall(branches[0]) if branches else []
+                if names:
+                    costs = [self.comp_cost(n, fused) for n in names]
+                    total.add(max(costs, key=lambda c: c.flops))
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if cm:
+                    total.add(self.comp_cost(cm.group(1), True))
+                if not fused:
+                    fb = self._fusion_io_bytes(
+                        cm.group(1) if cm else "", types, ins)
+                    total.bytes += fb
+                    total.note_bytes(fb, f"{name}/{ins.name}")
+                    if cm and self._is_pure_copy(cm.group(1)):
+                        total.copy_bytes += fb
+                continue
+
+            # collectives ------------------------------------------------
+            base = next((k for k in COLLECTIVE_KINDS
+                         if op == k or op == k + "-start"), None)
+            if base is not None:
+                nbytes = arg_bytes or out_bytes
+                total.collective_bytes += nbytes
+                s = total.collectives.setdefault(
+                    base, {"count": 0.0, "bytes": 0.0})
+                s["count"] += 1
+                s["bytes"] += nbytes
+                if not fused:
+                    total.bytes += arg_bytes + out_bytes
+                continue
+            if op.endswith("-done"):
+                continue
+
+            # compute ------------------------------------------------------
+            if op == "dot":
+                f = self._dot_flops(ins, types)
+                total.flops += f
+                meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+                total.top_dots.append((f, meta.group(1) if meta
+                                       else ins.name))
+                total.top_dots = sorted(total.top_dots, reverse=True)[:8]
+            elif op == "convolution":
+                # approximate: 2 * out_elems * (arg_elems0 / spatial_out)
+                lhs_elems, _ = shape_elems_bytes(types.get(
+                    ins.args[0], "")) if ins.args else (0.0, 0.0)
+                total.flops += 2.0 * out_elems * max(lhs_elems, 1) ** 0.5
+            elif op in ("reduce", "reduce-window", "scatter", "select-and-scatter"):
+                in_elems = sum(shape_elems_bytes(types.get(a, ""))[0]
+                               for a in ins.args[:1])
+                total.flops += in_elems
+            elif op in _ELEMENTWISE_1FLOP:
+                total.flops += out_elems
+                if op in ("exponential", "log", "tanh", "logistic", "power",
+                          "cosine", "sine", "erf", "cbrt",
+                          "exponential-minus-one", "log-plus-one"):
+                    total.transcendentals += out_elems
+
+            if not fused:
+                if op == "copy":
+                    total.copy_bytes += arg_bytes + out_bytes
+                # slice-aware top-level accounting (same rationale as
+                # _fusion_io_bytes)
+                if op in ("dynamic-slice", "gather", "slice"):
+                    total.bytes += 2 * out_bytes
+                    total.note_bytes(2 * out_bytes, f"{name}/{ins.name}")
+                elif op == "dynamic-update-slice" and len(ins.args) > 1:
+                    upd = shape_elems_bytes(types.get(ins.args[1], ""))[1]
+                    total.bytes += 2 * upd
+                    total.note_bytes(2 * upd, f"{name}/{ins.name}")
+                else:
+                    total.bytes += arg_bytes + out_bytes
+                    total.note_bytes(arg_bytes + out_bytes,
+                                     f"{name}/{ins.name}")
+
+        self._cache[key] = total
+        return total
+
+    def analyze(self) -> Cost:
+        return self.comp_cost(self.entry, False)
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).analyze()

@@ -1,0 +1,163 @@
+"""Parameterized TPU machine models (gem5's CPU/DRAM model analogue).
+
+gem5 ships "parameterized models for a wide number of components"; the
+user configures them from Python and the event engine gives timing.
+Here the components are TPU chips, ICI-connected pods, and DCN-connected
+clusters.  Every number is a ``Param`` so design-space exploration over
+hardware (the canonical gem5 use case) works: double HBM bandwidth,
+re-run the trace, read the new step time — no recompilation (elastic
+traces, §2.8).
+
+Roofline terms (EXPERIMENTS.md §Roofline) are derived from these same
+parameters, so desim and roofline are always consistent.
+
+Hardware constants for the target (TPU v5e, per chip):
+  peak bf16 compute 197 TFLOP/s ; HBM BW 819 GB/s ; ICI ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.simobject import Param, SimObject
+
+
+class ChipModel(SimObject):
+    """One accelerator chip (the 'CPU core model')."""
+
+    peak_flops = Param(float, 197e12, "peak bf16 FLOP/s (MXU)")
+    hbm_bw = Param(float, 819e9, "HBM bandwidth B/s")
+    hbm_bytes = Param(float, 16e9, "HBM capacity bytes")
+    vmem_bytes = Param(float, 128e6, "VMEM capacity bytes")
+    # derates: achievable fraction of peak (gem5 models expose similar
+    # efficiency knobs, e.g. DRAM bus utilization)
+    mxu_efficiency = Param(float, 0.85, "achievable MXU fraction for big GEMMs")
+    hbm_efficiency = Param(float, 0.8, "achievable HBM fraction")
+    # clock-skew multiplier used for straggler injection (1.0 = nominal)
+    slowdown = Param(float, 1.0, "straggler multiplier", check=lambda v: v > 0)
+
+    def compute_time_s(self, flops: float, bytes_accessed: float) -> float:
+        """Roofline execution time of one fused region on this chip."""
+        tc = flops / (self.peak_flops * self.mxu_efficiency)
+        tm = bytes_accessed / (self.hbm_bw * self.hbm_efficiency)
+        return max(tc, tm) * self.slowdown
+
+
+class LinkModel(SimObject):
+    """One ICI/DCN link."""
+
+    bw = Param(float, 50e9, "bandwidth B/s per direction")
+    latency_s = Param(float, 1e-6, "per-hop latency seconds")
+
+    def transfer_time_s(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / self.bw
+
+
+class PodModel(SimObject):
+    """A 2-D torus of chips (one TPU v5e pod = 16x16)."""
+
+    nx = Param(int, 16, "torus x dimension")
+    ny = Param(int, 16, "torus y dimension")
+
+    def __init__(self, name: str = "pod", chip: Optional[ChipModel] = None,
+                 ici: Optional[LinkModel] = None, **kw):
+        super().__init__(name, **kw)
+        self.chip = chip or ChipModel("chip")
+        self.ici = ici or LinkModel("ici")
+
+    @property
+    def num_chips(self) -> int:
+        return self.nx * self.ny
+
+    def axis_links(self) -> int:
+        """Usable torus links per chip (4 for a 2-D torus: +-x, +-y)."""
+        return 4
+
+    def bisection_bw(self) -> float:
+        """Pod bisection bandwidth (B/s) of the 2-D torus."""
+        # cutting a 2-D torus in half crosses 2*min(nx,ny) links,
+        # times 2 for the wraparound
+        return 2 * 2 * min(self.nx, self.ny) * self.ici.bw
+
+
+class DcnModel(LinkModel):
+    """Inter-pod data-center network (dist-gem5's TCP analogue)."""
+
+    bw = Param(float, 12.5e9, "per-host DCN bandwidth B/s (100 Gb/s)")
+    latency_s = Param(float, 10e-6, "cross-pod latency seconds")
+
+
+class ClusterModel(SimObject):
+    """Pods x PodModel joined by DCN."""
+
+    num_pods = Param(int, 1, "number of pods", check=lambda v: v >= 1)
+    # dist-gem5 quantum for multi-pod DES synchronization (ns ticks)
+    quantum_ns = Param(int, 100_000, "sync quantum in ns")
+
+    def __init__(self, name: str = "cluster", pod: Optional[PodModel] = None,
+                 dcn: Optional[DcnModel] = None, **kw):
+        super().__init__(name, **kw)
+        self.pod = pod or PodModel("pod")
+        self.dcn = dcn or DcnModel("dcn")
+
+    @property
+    def num_chips(self) -> int:
+        return self.num_pods * self.pod.num_chips
+
+    # -- roofline terms (per step, whole machine) -----------------------
+    def roofline_terms(self, total_flops: float, total_bytes: float,
+                       collective_bytes: float) -> dict:
+        """The three §Roofline terms, in seconds.
+
+        Definitions follow the assignment exactly:
+          compute    = HLO_FLOPs / (chips * peak)
+          memory     = HLO_bytes / (chips * HBM_bw)
+          collective = collective_bytes / (chips * link_bw)
+
+        where the per-chip totals are whole-program sums divided evenly
+        over chips (the dry-run cost model is per-device already; callers
+        pass per-device totals with chips=1, or global totals).
+        """
+        chips = self.num_chips
+        compute = total_flops / (chips * self.pod.chip.peak_flops)
+        memory = total_bytes / (chips * self.pod.chip.hbm_bw)
+        coll = collective_bytes / (chips * self.pod.ici.bw)
+        dominant = max(("compute", compute), ("memory", memory),
+                       ("collective", coll), key=lambda kv: kv[1])[0]
+        return {"compute_s": compute, "memory_s": memory,
+                "collective_s": coll, "dominant": dominant,
+                "bound_s": max(compute, memory, coll)}
+
+
+# Catalog entry for the target hardware (like gem5's DDR3_1600_8x8 etc.)
+TPU_V5E = dict(peak_flops=197e12, hbm_bw=819e9, hbm_bytes=16e9,
+               vmem_bytes=128e6)
+
+
+def default_cluster(mesh=None) -> ClusterModel:
+    """Build the production machine matching a jax mesh (or 1 pod)."""
+    num_pods = 1
+    if mesh is not None and "pod" in mesh.shape:
+        num_pods = mesh.shape["pod"]
+    c = ClusterModel("cluster", num_pods=num_pods)
+    c.instantiate()
+    return c
+
+
+@dataclass
+class MachineSnapshot:
+    """Plain-dict view used by benchmarks and JSON dumps."""
+
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    dcn_bw: float
+
+    @classmethod
+    def of(cls, m: ClusterModel) -> "MachineSnapshot":
+        return cls(chips=m.num_chips, peak_flops=m.pod.chip.peak_flops,
+                   hbm_bw=m.pod.chip.hbm_bw, ici_bw=m.pod.ici.bw,
+                   dcn_bw=m.dcn.bw)

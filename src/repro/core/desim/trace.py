@@ -1,0 +1,316 @@
+"""Elastic execution traces parsed from compiled HLO (gem5-20 §2.8).
+
+gem5's elastic traces capture *dependency-carrying* instruction traces
+from the detailed O3 model once, then replay them under different
+memory-system parameters without re-running the expensive model.  The
+g5x analogue: parse the **compiled** HLO of a jitted step once, extract
+the op-level structure (compute regions, collectives with byte counts,
+dependencies), and replay that trace on any parameterized machine model
+(`repro.core.desim.machine`) without recompiling — change HBM bandwidth,
+ICI speed, or the collective algorithm and re-run the trace in
+milliseconds.  The "elastic" property is identical: the trace respects
+true dependencies (program order per partition + collective barriers)
+while timing comes from the machine model under test.
+
+This module is also the §Roofline data source: ``collective_bytes_from_hlo``
+sums operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in the lowered module text (the
+assignment's prescribed method — these bytes are *not* in
+``cost_analysis()``).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# one tensor type, e.g. ``bf16[256,4096]{1,0}`` or ``f32[]``
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# an HLO instruction line:  ``  %name = <ret-type(s)> opcode(...), attrs``
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# async forms: all-gather-start, all-reduce-start, collective-permute-start...
+_COLLECTIVE_PREFIXES = tuple(COLLECTIVE_OPS)
+
+
+def shape_bytes(type_str: str) -> float:
+    """Total bytes of one or a tuple of tensor types in HLO syntax."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _base_collective(opcode: str) -> Optional[str]:
+    """Map e.g. ``all-reduce-start`` -> ``all-reduce`` (None if not coll)."""
+    for base in _COLLECTIVE_PREFIXES:
+        if opcode == base or opcode == base + "-start":
+            return base
+    return None
+
+
+@dataclass
+class HloInstr:
+    name: str
+    opcode: str
+    out_bytes: float
+    operand_bytes: float
+    replica_groups: int = 0          # participants per group (0 = unknown)
+    raw: str = ""
+
+
+def parse_hlo_instructions(hlo_text: str) -> List[HloInstr]:
+    """Parse instruction lines of an HLO module dump (text format)."""
+    out: List[HloInstr] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rettype, opcode, rest = m.groups()
+        # operand types appear inside the call parens; parse shapes from
+        # the portion before any attribute list.  HLO operands are
+        # ``%op`` references without inline types in the compiled dump,
+        # so operand bytes must be resolved via the def table below.
+        out.append(HloInstr(name=name, opcode=opcode,
+                            out_bytes=shape_bytes(rettype),
+                            operand_bytes=0.0, raw=line))
+    # resolve operand byte counts from the definition table
+    defs: Dict[str, HloInstr] = {i.name: i for i in out}
+    ref_re = re.compile(r"%([\w.\-]+)")
+    for instr in out:
+        # references after the opcode's open paren
+        call = instr.raw.split(instr.opcode + "(", 1)
+        if len(call) != 2:
+            continue
+        body = call[1]
+        # cut off attributes that follow the closing paren of the call
+        depth, end = 1, len(body)
+        for i, ch in enumerate(body):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        for ref in ref_re.findall(body[:end]):
+            d = defs.get(ref)
+            if d is not None:
+                instr.operand_bytes += d.out_bytes
+        # replica group size: count ids in the first {..} group of
+        # replica_groups={{0,1,..},{..}} or replica_groups=[N,M]<=...
+        rg = re.search(r"replica_groups=\{\{([0-9, ]+)\}", instr.raw)
+        if rg:
+            instr.replica_groups = len(rg.group(1).split(","))
+        else:
+            rg2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.raw)
+            if rg2:
+                instr.replica_groups = int(rg2.group(2))
+    return out
+
+
+def collectives_from_hlo(hlo_text: str) -> List[Dict]:
+    """Every collective op with kind, operand bytes, and participants."""
+    colls: List[Dict] = []
+    for instr in parse_hlo_instructions(hlo_text):
+        base = _base_collective(instr.opcode)
+        if base is None:
+            continue
+        nbytes = instr.operand_bytes
+        if nbytes <= 0:      # fall back to output size (e.g. all-gather-start
+            nbytes = instr.out_bytes   # tuples hide operand refs)
+        colls.append({"kind": base, "bytes": nbytes,
+                      "participants": instr.replica_groups or 0,
+                      "name": instr.name})
+    return colls
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> float:
+    """Sum of operand bytes over all collective ops (§Roofline source)."""
+    return float(sum(c["bytes"] for c in collectives_from_hlo(hlo_text)))
+
+
+def collective_schedule_summary(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-kind count/bytes summary, for EXPERIMENTS.md §Dry-run."""
+    summary: Dict[str, Dict[str, float]] = {}
+    for c in collectives_from_hlo(hlo_text):
+        s = summary.setdefault(c["kind"], {"count": 0, "bytes": 0.0})
+        s["count"] += 1
+        s["bytes"] += c["bytes"]
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# Elastic trace
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TraceOp:
+    """One node of the elastic trace.
+
+    kind      : 'compute' | one of COLLECTIVE_OPS
+    flops     : FLOPs of a compute region (per participating chip)
+    bytes     : HBM bytes touched by a compute region (per chip)
+    coll_bytes: global payload bytes of a collective
+    participants : chips taking part in the collective
+    deps      : indices of TraceOps that must complete first
+    overlap   : collective may overlap the *next* compute region
+                (models async collectives / comm-compute overlap)
+    scope     : 'ici' (intra-pod) or 'dcn' (inter-pod) for collectives
+    """
+
+    kind: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    participants: int = 1
+    deps: Tuple[int, ...] = ()
+    overlap: bool = False
+    scope: str = "ici"
+    name: str = ""
+
+
+@dataclass
+class HloTrace:
+    """A dependency-carrying, machine-independent trace of one step."""
+
+    name: str
+    ops: List[TraceOp] = field(default_factory=list)
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    # -- constructors --------------------------------------------------
+    @classmethod
+    def from_hlo_text(cls, hlo_text: str, name: str = "step",
+                      total_flops: float = 0.0,
+                      total_bytes: float = 0.0) -> "HloTrace":
+        """Build a trace from compiled HLO text.
+
+        Compute regions between consecutive collectives become single
+        ``compute`` ops.  Because ``cost_analysis`` only reports module
+        totals, per-region flops/bytes are apportioned by the region's
+        share of non-collective output bytes — the same granularity
+        trade-off gem5's elastic traces make (they record memory-order
+        dependencies, not per-uop microarchitecture state).
+        """
+        instrs = parse_hlo_instructions(hlo_text)
+        # region split
+        regions: List[List[HloInstr]] = [[]]
+        colls: List[Optional[HloInstr]] = []
+        for instr in instrs:
+            if _base_collective(instr.opcode):
+                colls.append(instr)
+                regions.append([])
+            else:
+                regions[-1].append(instr)
+        region_w = [sum(i.out_bytes for i in r) for r in regions]
+        wsum = sum(region_w) or 1.0
+
+        trace = cls(name=name,
+                    meta={"total_flops": total_flops,
+                          "total_bytes": total_bytes})
+        prev = -1
+        for ridx, region in enumerate(regions):
+            share = region_w[ridx] / wsum
+            cop = TraceOp(kind="compute", flops=total_flops * share,
+                          bytes=total_bytes * share,
+                          deps=(prev,) if prev >= 0 else (),
+                          name=f"region{ridx}")
+            trace.ops.append(cop)
+            prev = len(trace.ops) - 1
+            if ridx < len(colls):
+                ci = colls[ridx]
+                base = _base_collective(ci.opcode) or "all-reduce"
+                nbytes = ci.operand_bytes or ci.out_bytes
+                trace.ops.append(TraceOp(
+                    kind=base, coll_bytes=nbytes,
+                    participants=ci.replica_groups or 0,
+                    deps=(prev,), overlap=ci.opcode.endswith("-start"),
+                    name=ci.name))
+                prev = len(trace.ops) - 1
+        return trace
+
+    # -- persistence -----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({"name": self.name, "meta": self.meta,
+                           "ops": [asdict(o) for o in self.ops]})
+
+    @classmethod
+    def from_json(cls, s: str) -> "HloTrace":
+        d = json.loads(s)
+        ops = [TraceOp(**{**o, "deps": tuple(o["deps"])}) for o in d["ops"]]
+        return cls(name=d["name"], ops=ops, meta=d.get("meta", {}))
+
+    # -- stats -------------------------------------------------------------
+    def collective_bytes(self) -> float:
+        return sum(o.coll_bytes for o in self.ops if o.kind != "compute")
+
+    def compute_flops(self) -> float:
+        return sum(o.flops for o in self.ops)
+
+
+def analytic_trace(name: str, layers: int, layer_flops: float,
+                   layer_bytes: float, layer_collectives: Iterable[Dict],
+                   tail_collectives: Iterable[Dict] = (),
+                   overlap: bool = False) -> HloTrace:
+    """Build a trace from a *model-level* cost description.
+
+    This is the gem5 'parameterized model' path: when we know the math
+    of a layer (flops, bytes, the collectives its sharding implies) we
+    can synthesize the trace directly — useful for DSE sweeps over
+    configs that were never compiled (and for testing the executor).
+    ``layer_collectives``/``tail_collectives``: dicts with keys
+    kind/bytes/participants/scope.
+    """
+    t = HloTrace(name=name)
+    prev = -1
+    for l in range(layers):
+        t.ops.append(TraceOp(kind="compute", flops=layer_flops,
+                             bytes=layer_bytes,
+                             deps=(prev,) if prev >= 0 else (),
+                             name=f"layer{l}"))
+        prev = len(t.ops) - 1
+        for c in layer_collectives:
+            t.ops.append(TraceOp(kind=c["kind"], coll_bytes=c["bytes"],
+                                 participants=c.get("participants", 0),
+                                 scope=c.get("scope", "ici"),
+                                 deps=(prev,), overlap=overlap,
+                                 name=f"layer{l}/{c['kind']}"))
+            prev = len(t.ops) - 1
+    for c in tail_collectives:
+        t.ops.append(TraceOp(kind=c["kind"], coll_bytes=c["bytes"],
+                             participants=c.get("participants", 0),
+                             scope=c.get("scope", "dcn"),
+                             deps=(prev,), overlap=overlap,
+                             name=f"tail/{c['kind']}"))
+        prev = len(t.ops) - 1
+    return t

@@ -1,0 +1,263 @@
+"""Hierarchical statistics database (gem5-20 paper §2.21.1).
+
+gem5's new statistics API introduced *statistics groups*: stats are
+bound to their SimObject's group and the groups form a tree matching
+the SimObject graph, enabling subtree dumps and structured (HDF5)
+output.  g5x reproduces that design:
+
+* ``Scalar`` / ``Vector`` / ``Distribution`` / ``Formula`` stat kinds
+  (the gem5 kinds used by virtually every model).
+* ``StatGroup`` trees with dotted-path resolution and subtree dumps —
+  "the ability to dump statistics for a subset of the object graph".
+* Time-series sampling into an N-dimensional structure dumped as JSON
+  (the container has no HDF5; JSON with the same time-major layout is
+  the stand-in, and the writer is pluggable).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Callable, Dict, List, Optional
+
+
+class Stat:
+    kind = "stat"
+
+    def __init__(self, name: str, desc: str = "", unit: str = ""):
+        self.name = name
+        self.desc = desc
+        self.unit = unit
+
+    def value(self) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def reset(self) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "name": self.name, "desc": self.desc,
+                "unit": self.unit, "value": self.value()}
+
+
+class Scalar(Stat):
+    kind = "scalar"
+
+    def __init__(self, name: str, desc: str = "", unit: str = ""):
+        super().__init__(name, desc, unit)
+        self._v = 0.0
+
+    def inc(self, by: float = 1.0) -> None:
+        self._v += by
+
+    def set(self, v: float) -> None:
+        self._v = float(v)
+
+    def value(self) -> float:
+        return self._v
+
+    def reset(self) -> None:
+        self._v = 0.0
+
+
+class Vector(Stat):
+    kind = "vector"
+
+    def __init__(self, name: str, size: int, desc: str = "", unit: str = "",
+                 labels: Optional[List[str]] = None):
+        super().__init__(name, desc, unit)
+        self._v = [0.0] * size
+        self.labels = labels or [str(i) for i in range(size)]
+
+    def inc(self, idx: int, by: float = 1.0) -> None:
+        self._v[idx] += by
+
+    def set(self, idx: int, v: float) -> None:
+        self._v[idx] = float(v)
+
+    def value(self) -> List[float]:
+        return list(self._v)
+
+    def total(self) -> float:
+        return sum(self._v)
+
+    def reset(self) -> None:
+        self._v = [0.0] * len(self._v)
+
+
+class Distribution(Stat):
+    """Streaming distribution: count/mean/var/min/max (Welford)."""
+
+    kind = "distribution"
+
+    def __init__(self, name: str, desc: str = "", unit: str = ""):
+        super().__init__(name, desc, unit)
+        self.reset()
+
+    def sample(self, v: float, n: int = 1) -> None:
+        for _ in range(n):
+            self._count += 1
+            d = v - self._mean
+            self._mean += d / self._count
+            self._m2 += d * (v - self._mean)
+        self._min = min(self._min, v)
+        self._max = max(self._max, v)
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def mean(self) -> float:
+        return self._mean
+
+    @property
+    def stddev(self) -> float:
+        return math.sqrt(self._m2 / self._count) if self._count else 0.0
+
+    def value(self) -> Dict[str, float]:
+        return {"count": self._count, "mean": self._mean,
+                "stddev": self.stddev,
+                "min": self._min if self._count else 0.0,
+                "max": self._max if self._count else 0.0}
+
+    def reset(self) -> None:
+        self._count = 0
+        self._mean = 0.0
+        self._m2 = 0.0
+        self._min = float("inf")
+        self._max = float("-inf")
+
+
+class Formula(Stat):
+    """Lazily-evaluated derived stat (gem5 ``Formula``)."""
+
+    kind = "formula"
+
+    def __init__(self, name: str, fn: Callable[[], float], desc: str = "",
+                 unit: str = ""):
+        super().__init__(name, desc, unit)
+        self._fn = fn
+
+    def value(self) -> float:
+        try:
+            return self._fn()
+        except ZeroDivisionError:
+            return 0.0
+
+    def reset(self) -> None:
+        pass
+
+
+class StatGroup:
+    """A named group of stats; groups form a tree mirroring SimObjects."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._stats: Dict[str, Stat] = {}
+        self._children: List[StatGroup] = []
+
+    # -- construction ---------------------------------------------------
+    def scalar(self, name: str, desc: str = "", unit: str = "") -> Scalar:
+        return self._add(Scalar(name, desc, unit))
+
+    def vector(self, name: str, size: int, desc: str = "", unit: str = "",
+               labels: Optional[List[str]] = None) -> Vector:
+        return self._add(Vector(name, size, desc, unit, labels))
+
+    def distribution(self, name: str, desc: str = "",
+                     unit: str = "") -> Distribution:
+        return self._add(Distribution(name, desc, unit))
+
+    def formula(self, name: str, fn: Callable[[], float], desc: str = "",
+                unit: str = "") -> Formula:
+        return self._add(Formula(name, fn, desc, unit))
+
+    def _add(self, stat: Stat) -> Any:
+        if stat.name in self._stats:
+            raise ValueError(f"duplicate stat {stat.name!r} in {self.name}")
+        self._stats[stat.name] = stat
+        return stat
+
+    def add_child(self, group: "StatGroup") -> None:
+        if group not in self._children:
+            self._children.append(group)
+
+    # -- access -----------------------------------------------------------
+    def __getitem__(self, dotted: str) -> Stat:
+        parts = dotted.split(".")
+        grp: StatGroup = self
+        for p in parts[:-1]:
+            match = [c for c in grp._children if c.name == p]
+            if not match:
+                raise KeyError(f"no stat group {p!r} under {grp.name!r}")
+            grp = match[0]
+        return grp._stats[parts[-1]]
+
+    def stats(self) -> Dict[str, Stat]:
+        return dict(self._stats)
+
+    # -- dumping -----------------------------------------------------------
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "stats": {k: s.as_dict() for k, s in self._stats.items()},
+            "children": [c.as_dict() for c in self._children],
+        }
+
+    def flat(self, prefix: str = "") -> Dict[str, Any]:
+        """Flatten to ``path.stat -> value`` (gem5 stats.txt style)."""
+        path = f"{prefix}{self.name}"
+        out = {f"{path}.{k}": s.value() for k, s in self._stats.items()}
+        for c in self._children:
+            out.update(c.flat(prefix=f"{path}."))
+        return out
+
+    def dump_text(self) -> str:
+        lines = ["---------- Begin Simulation Statistics ----------"]
+        for k, v in self.flat().items():
+            lines.append(f"{k:<60} {v}")
+        lines.append("---------- End Simulation Statistics ----------")
+        return "\n".join(lines)
+
+    def dump_json(self, path: Optional[str] = None) -> str:
+        s = json.dumps(self.as_dict(), indent=1, default=str)
+        if path:
+            with open(path, "w") as f:
+                f.write(s)
+        return s
+
+    def reset(self) -> None:
+        for s in self._stats.values():
+            s.reset()
+        for c in self._children:
+            c.reset()
+
+
+class TimeSeries:
+    """Sampled time-series store (the paper's HDF5 backend stand-in).
+
+    Stores one row per ``sample()`` call; each row is the flat stat dict
+    of the attached group.  Layout is time-major like gem5's HDF5 files
+    ("we use one dimension for time and the remaining dimensions for the
+    statistic").
+    """
+
+    def __init__(self, group: StatGroup):
+        self.group = group
+        self.times: List[float] = []
+        self.rows: List[Dict[str, Any]] = []
+
+    def sample(self, t: float) -> None:
+        self.times.append(t)
+        self.rows.append(self.group.flat())
+
+    def column(self, key: str) -> List[Any]:
+        return [r.get(key) for r in self.rows]
+
+    def dump_json(self, path: Optional[str] = None) -> str:
+        s = json.dumps({"time": self.times, "rows": self.rows}, default=str)
+        if path:
+            with open(path, "w") as f:
+                f.write(s)
+        return s

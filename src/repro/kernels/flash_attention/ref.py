@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Causal (optionally sliding-window) multi-head attention with f32
+softmax accumulation — numerically the ground truth the Pallas kernel
+must match (and the same math as
+``repro.models.layers.naive_causal_attention``, kept standalone so the
+kernel package is self-contained).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q/k/v: (b, s, h, d) -> (b, s, h, d)."""
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        mask = ki <= qi
+        if window:
+            mask &= ki > qi - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)

@@ -1,0 +1,15 @@
+"""Oracle for the fused expert-MLP kernel: per-expert SwiGLU FFN over
+capacity blocks (the expert compute of ``repro.models.moe``)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_mlp_ref(x, wi, wg, wo):
+    """x: (G, E, C, D); wi/wg: (E, D, F); wo: (E, F, D)."""
+    h = jnp.einsum("gecd,edf->gecf", x, wi)
+    u = jnp.einsum("gecd,edf->gecf", x, wg)
+    h = jax.nn.silu(h) * u
+    return jnp.einsum("gecf,efd->gecd", h, wo)

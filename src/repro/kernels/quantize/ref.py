@@ -1,0 +1,18 @@
+"""Oracle for the int8 block-quantize kernel (the gradient-compression
+hot loop): identical math to ``repro.optim.compress``."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x):
+    """x: (nb, block) f32 -> (q int8, scales f32 (nb,))."""
+    scale = jnp.max(jnp.abs(x), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q, scale):
+    return q.astype(jnp.float32) * scale[:, None]

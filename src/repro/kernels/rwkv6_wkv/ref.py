@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the WKV6 kernel: the exact sequential recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t S_{t-1} + (r_t . u . k_t) v_t
+
+r/k/v/w inputs are per-head (b, s, h, n) with w = decay in (0, 1);
+u (h, n) is the bonus.  This is O(s) sequential — slow but
+unambiguously correct, which is what an oracle is for.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    """Returns (y (b, s, h, n), final state (b, h, n, n))."""
+    b, s, h, n = r.shape
+    f32 = jnp.float32
+    rr, kk, vv, ww = (x.astype(f32) for x in (r, k, v, w))
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), f32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs          # (b, h, n)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S) + \
+            jnp.einsum("bhn,hn,bhn->bh", rt, u.astype(f32), kt)[..., None] \
+            * vt
+        S = wt[..., None] * S + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        return S, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rr, kk, vv, ww))
+    S, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), S

@@ -1,0 +1,72 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+On this CPU container it trains REDUCED (smoke) configs for real; on a
+TPU pod the same driver takes ``--full`` and the production mesh.  The
+trainer is the SimObject loop from ``repro.train.trainer`` with
+checkpointing, heartbeat, straggler watchdog, and deterministic data.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import REGISTRY, get_config, smoke
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.train import TrainOptions, build_train_step, init_train_state
+from repro.train.step import default_options_for
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b",
+                    choices=sorted(REGISTRY))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (TPU-scale)")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override smoke width (e.g. ~100M model)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = smoke(cfg)
+        if args.d_model:
+            import dataclasses
+            hd = max(16, args.d_model // max(cfg.n_heads, 1))
+            cfg = dataclasses.replace(
+                cfg, d_model=args.d_model, d_ff=args.d_model * 3,
+                d_head=hd, vocab_size=4096,
+                n_layers=max(cfg.n_layers, 8))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    model = build_model(cfg)
+    base = default_options_for(cfg)
+    import dataclasses
+    opts = dataclasses.replace(base, peak_lr=args.lr, warmup=10,
+                               total_steps=args.steps, chunk=1024)
+    state = init_train_state(model, jax.random.PRNGKey(args.seed), opts)
+    step = build_train_step(model, opts)
+    pipe = SyntheticPipeline(cfg, shape, seed=args.seed)
+    tr = Trainer(model=model, train_step=step, pipeline=pipe, state=state,
+                 ckpt_dir=args.ckpt_dir, ckpt_interval=50)
+    tr.instantiate()
+    res = tr.run(args.steps)
+    print(tr.stats.dump_text())
+    h = res["history"]
+    print(json.dumps({"first_loss": h[0]["loss"], "last_loss": h[-1]["loss"],
+                      "steps": res["final_step"],
+                      "median_step_s": tr.watchdog.median()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: pure-JAX pytree models for all assigned architectures."""
+
+from repro.models.api import Model, build_model  # noqa: F401

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based, group-local
+dispatch (dropless up to a capacity factor).
+
+Design (TPU-adapted, see DESIGN.md):
+
+* Tokens are grouped by batch row; groups are sharded over the
+  ("pod","data") mesh axes, so all routing/sorting/gathering below is
+  *local to a shard* — no token ever crosses the data axis.  Expert
+  weights are sharded (embed -> data [FSDP], mlp -> model [TP]) so the
+  expert compute is tensor-parallel; XLA inserts the FSDP all-gather
+  and the TP reduce exactly as for a dense MLP.
+* Dispatch is sort-based (MegaBlocks/MaxText style), NOT the GShard
+  one-hot einsum: a one-hot dispatch tensor costs O(tokens*E*C*D) FLOPs
+  (~3x the expert compute at OLMoE scale); sorting costs
+  O(tokens*k*log) scalar work and the gathers are pure data movement.
+* Capacity C = ceil(top_k * T * capacity_factor / E) per group.  Slots
+  beyond C drop (standard GShard semantics); the aux load-balance loss
+  pushes the router toward balance.
+
+Everything is differentiable where it must be: gathers carry gradients
+to token activations and expert outputs; `argsort`/`searchsorted`
+operate on integer routing metadata only.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Sharder, IDENTITY_SHARDER, param, split_key
+
+
+def init_moe(key, cfg) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split_key(key, 4)
+    p = {
+        "router": param(ks[0], (d, e), ("embed", None), scale=0.02),
+        "wi": param(ks[1], (e, d, f), ("experts", "embed", "mlp")),
+        "wo": param(ks[2], (e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = param(ks[3], (e, d, f), ("experts", "embed", "mlp"))
+    return p
+
+
+def route_topk(logits, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """logits (..., E) -> (gates (..., k) renormalized, idx (..., k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def load_balance_loss(probs, idx, n_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    # f_e: fraction of (token, k) assignments to expert e
+    one_hot = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)
+    f = jnp.mean(jnp.sum(one_hot, axis=-2), axis=tuple(range(one_hot.ndim - 2)))
+    f = f / one_hot.shape[-2]
+    P = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return n_experts * jnp.sum(f * P)
+
+
+MAX_GROUP_TOKENS = 4096
+
+
+def apply_moe(p: Dict, x, cfg, sharder: Sharder = IDENTITY_SHARDER
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    # groups = batch rows, subdivided so a group never exceeds
+    # MAX_GROUP_TOKENS (prefill_32k would otherwise build 8x-capacity
+    # dispatch blocks; finer groups shrink every intermediate by the
+    # same factor at identical FLOPs)
+    sub = max(1, S // MAX_GROUP_TOKENS) if S % MAX_GROUP_TOKENS == 0 else 1
+    G, T = B * sub, S // sub
+    x = x.reshape(G, T, D)
+    TK = T * K
+    C = max(1, math.ceil(K * T * cfg.capacity_factor / E))
+    C = min(C, TK)
+
+    logits = jnp.einsum("gtd,de->gte", x, p["router"]).astype(jnp.float32)
+    # routing metadata is tiny: pin it to batch-only sharding so the
+    # partitioner never inserts model-axis rendezvous collectives for
+    # the sort/gather index chain (hillclimb cell 1: these accounted
+    # for the bulk of olmoe's 637 GB/dev of per-token all-reduces)
+    logits = sharder.ac(logits, ("batch", None, None))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = route_topk(logits, K)           # (G,T,K)
+    aux = load_balance_loss(probs, eidx, E)
+
+    flat_e = eidx.reshape(G, TK)
+    flat_e = sharder.ac(flat_e, ("batch", None))
+    sort_idx = jnp.argsort(flat_e, axis=-1)                       # (G,TK)
+    sort_idx = sharder.ac(sort_idx, ("batch", None))
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    # per-group start offset of each expert's segment in sorted order
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="left"))(sorted_e)
+    ends = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="right"))(sorted_e)
+
+    # --- dispatch: gather tokens into (G, E, C, D) capacity blocks -----
+    pos = starts[:, :, None] + jnp.arange(C)[None, None, :]       # (G,E,C)
+    valid = pos < ends[:, :, None]
+    pos_c = jnp.minimum(pos, TK - 1).reshape(G, E * C)
+    slot_src = jnp.take_along_axis(sort_idx, pos_c, axis=-1)      # (G,EC)
+    tok_src = slot_src // K                                       # (G,EC)
+    xin = jnp.take_along_axis(
+        x, tok_src[:, :, None].astype(jnp.int32), axis=1)         # (G,EC,D)
+    xin = xin * valid.reshape(G, E * C, 1).astype(x.dtype)
+    xin = xin.reshape(G, E, C, D)
+    xin = sharder.ac(xin, ("batch", None, None, None))
+
+    # --- expert compute (tensor-parallel over "mlp") --------------------
+    h = jnp.einsum("gecd,edf->gecf", xin, p["wi"])
+    if cfg.act == "swiglu":
+        u = jnp.einsum("gecd,edf->gecf", xin, p["wg"])
+        h = jax.nn.silu(h) * u
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = sharder.ac(h, ("batch", None, None, "mlp"))
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])                # (G,E,C,D)
+    # the down-projection contracts over the model-sharded d_ff: ask for
+    # a D-sharded ("mlp") output so the partial sums REDUCE-SCATTER
+    # (1/model_size the bytes of the all-reduce the replicated layout
+    # forced — hillclimb cell 1, iteration 5).  The combine gathers and
+    # the final residual reshard move bf16 over all-to-all.
+    out = sharder.ac(out, ("batch", None, None, "moe_d"))
+
+    # --- combine: gather each (token, k) slot's output, weight by gate --
+    inv = jnp.argsort(sort_idx, axis=-1)                          # (G,TK)
+    c_of = inv - jnp.take_along_axis(starts, flat_e, axis=-1)     # (G,TK)
+    within = (c_of >= 0) & (c_of < C)
+    flat_slot = flat_e * C + jnp.clip(c_of, 0, C - 1)             # (G,TK)
+    out_flat = out.reshape(G, E * C, D)
+    per_k = jnp.take_along_axis(
+        out_flat, flat_slot[:, :, None].astype(jnp.int32), axis=1)
+    per_k = per_k * within[:, :, None].astype(x.dtype)
+    per_k = per_k.reshape(G, T, K, D)
+    y = jnp.einsum("gtkd,gtk->gtd", per_k, gates.astype(x.dtype))
+    return y.reshape(B, S, D), aux

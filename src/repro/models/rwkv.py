@@ -1,0 +1,198 @@
+"""RWKV-6 (Finch): attention-free blocks with data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix uses the WKV6 linear recurrence per 64-wide head:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t         (S: (n_k, n_v) per head)
+    y_t = r_t S_{t-1} + (r_t . u . k_t) v_t      (u: per-head bonus)
+
+The training path is *chunked*: within a chunk, pairwise decay factors
+are exponentials of cumulative-log-decay *differences*, which are all
+<= 0 for causal pairs — numerically safe by construction (no unbounded
+exp(-cumsum) rescaling).  The chunk math is the oracle for
+``repro.kernels.rwkv6_wkv``.  Decode uses the O(1)-state recurrence,
+which is what makes the ``long_500k`` cell runnable for this family.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Sharder, IDENTITY_SHARDER, param, split_key
+
+LORA_R = 32       # low-rank size of the data-dependent mix/decay MLPs
+MIX_KINDS = 5     # r, k, v, g, w
+
+
+def init_rwkv_block(key, cfg) -> Dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    ks = split_key(key, 16)
+    tm = {
+        "mu_x": param(ks[0], (d,), (None,), init="zeros"),
+        "mu": param(ks[1], (MIX_KINDS, d), (None, None), init="zeros"),
+        "lora_a": param(ks[2], (d, MIX_KINDS, LORA_R), ("embed", None, None),
+                        scale=0.02),
+        "lora_b": param(ks[3], (MIX_KINDS, LORA_R, d), (None, None, None),
+                        scale=0.02),
+        "wr": param(ks[4], (d, h, hs), ("embed", "heads", None)),
+        "wk": param(ks[5], (d, h, hs), ("embed", "heads", None)),
+        "wv": param(ks[6], (d, h, hs), ("embed", "heads", None)),
+        "wg": param(ks[7], (d, h, hs), ("embed", "heads", None)),
+        "wo": param(ks[8], (h, hs, d), ("heads", None, "embed")),
+        "w0": param(ks[9], (h, hs), ("heads", None), init="zeros"),
+        "w_lora_a": param(ks[10], (d, LORA_R), ("embed", None), scale=0.02),
+        "w_lora_b": param(ks[11], (LORA_R, h, hs), (None, "heads", None),
+                          scale=0.02),
+        "u": param(ks[12], (h, hs), ("heads", None), init="zeros"),
+        "ln_x_scale": param(ks[13], (h, hs), ("heads", None), init="ones"),
+        "ln_x_bias": param(ks[13], (h, hs), ("heads", None), init="zeros"),
+    }
+    cm = {
+        "mu_k": param(ks[14], (d,), (None,), init="zeros"),
+        "mu_r": param(ks[14], (d,), (None,), init="zeros"),
+        "wk": param(ks[14], (d, cfg.d_ff), ("embed", "mlp")),
+        "wv": param(ks[15], (cfg.d_ff, d), ("mlp", "embed")),
+        "wr": param(ks[15], (d, d), ("embed", None)),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def _token_shift(x, prev: Optional[jnp.ndarray]):
+    """xx_t = x_{t-1}; prev: (b, 1, d) carried state (zeros at start)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, lw, u, state0=None, chunk: int = 32):
+    """Chunked WKV6 scan.
+
+    r/k/v/lw: (b, s, h, n) with lw = log(decay) <= 0; u: (h, n).
+    Returns (y (b, s, h, n), state (b, h, n, n)).
+    """
+    b, s, h, n = r.shape
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    L = chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.reshape(b, nc, L, h, n).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), f32)
+
+    causal = jnp.tril(jnp.ones((L, L), bool), k=-1)   # strictly lower
+
+    def body(S, xs):
+        rr, kk, vv, ww = (x.astype(f32) for x in xs)   # (b,L,h,n)
+        cum = jnp.cumsum(ww, axis=1)                   # (b,L,h,n), <= 0
+        cum_prev = cum - ww                            # cum_{t-1}
+        # pairwise decay exp(cum_{l-1} - cum_m) for m < l: always <= 0 arg
+        dmat = cum_prev[:, :, None] - cum[:, None, :, :, :]   # (b,L,L,h,n)
+        dmat = jnp.where(causal[None, :, :, None, None], dmat, -jnp.inf)
+        scores = jnp.einsum("blhn,bmhn,blmhn->bhlm", rr, kk, jnp.exp(dmat))
+        intra = jnp.einsum("bhlm,bmhn->blhn", scores, vv)
+        diag = jnp.einsum("blhn,hn,blhn->blh", rr, u.astype(f32), kk)
+        intra = intra + diag[..., None] * vv
+        # inter-chunk: r_t * a_{t-1} applied to carried state
+        r_hat = rr * jnp.exp(cum_prev)
+        inter = jnp.einsum("blhn,bhnm->blhm", r_hat, S)
+        y = inter + intra
+        # state update: S' = diag(a_L) S + sum_m (a_L/a_m) k_m (x) v_m
+        a_L = jnp.exp(cum[:, -1])                      # (b,h,n)
+        k_tail = kk * jnp.exp(cum[:, -1:, :, :] - cum)  # <= multiplier 1
+        S_new = a_L[..., None] * S + jnp.einsum(
+            "bmhn,bmhv->bhnv", k_tail, vv)
+        return S_new, y
+
+    S, ys = jax.lax.scan(body, state0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, n)
+    return y.astype(r.dtype), S
+
+
+def wkv6_step(r, k, v, lw, u, state):
+    """One decode step.  r/k/v/lw: (b, 1, h, n); state (b, h, n, n)."""
+    f32 = jnp.float32
+    rr, kk, vv, ww = (x[:, 0].astype(f32) for x in (r, k, v, lw))
+    y = jnp.einsum("bhn,bhnm->bhm", rr, state) \
+        + jnp.einsum("bhn,hn,bhn->bh", rr, u.astype(f32), kk)[..., None] \
+        * vv
+    state = jnp.exp(ww)[..., None] * state + jnp.einsum(
+        "bhn,bhv->bhnv", kk, vv)
+    return y[:, None].astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _ddlerp(tm, x, xx):
+    """RWKV6 data-dependent token-shift mixes for r,k,v,g,w."""
+    base = x + (xx - x) * tm["mu_x"]
+    lo = jnp.einsum("bsd,dkr->bskr", base, tm["lora_a"])
+    lo = jnp.tanh(lo)
+    delta = jnp.einsum("bskr,krd->bskd", lo, tm["lora_b"])
+    mixes = tm["mu"][None, None] + delta                   # (b,s,5,d)
+    return [x + (xx - x) * mixes[:, :, i] for i in range(MIX_KINDS)]
+
+
+def _head_groupnorm(tm, y, eps=64e-5):
+    f = y.astype(jnp.float32)
+    mean = jnp.mean(f, axis=-1, keepdims=True)
+    var = jnp.var(f, axis=-1, keepdims=True)
+    f = (f - mean) * jax.lax.rsqrt(var + eps)
+    return (f * tm["ln_x_scale"] + tm["ln_x_bias"]).astype(y.dtype)
+
+
+def apply_time_mix(tm: Dict, x, cfg, sharder: Sharder = IDENTITY_SHARDER,
+                   shift_state=None, wkv_state=None, chunk: int = 32
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (out, new_shift_state, new_wkv_state)."""
+    xx = _token_shift(x, shift_state)
+    xr, xk, xv, xg, xw = _ddlerp(tm, x, xx)
+    r = jnp.einsum("bsd,dhn->bshn", xr, tm["wr"])
+    k = jnp.einsum("bsd,dhn->bshn", xk, tm["wk"])
+    v = jnp.einsum("bsd,dhn->bshn", xv, tm["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhn->bshn", xg, tm["wg"]))
+    wdel = jnp.einsum("bsd,dr->bsr", xw, tm["w_lora_a"])
+    wdel = jnp.einsum("bsr,rhn->bshn", jnp.tanh(wdel), tm["w_lora_b"])
+    lw = -jnp.exp(tm["w0"][None, None].astype(jnp.float32)
+                  + wdel.astype(jnp.float32))      # log decay, < 0
+    for t in (r, k, v):
+        pass
+    r = sharder.ac(r, ("batch", None, "heads", None))
+    k = sharder.ac(k, ("batch", None, "heads", None))
+    v = sharder.ac(v, ("batch", None, "heads", None))
+    if x.shape[1] == 1 and wkv_state is not None:
+        y, new_state = wkv6_step(r, k, v, lw, tm["u"], wkv_state)
+    else:
+        y, new_state = wkv6_chunked(r, k, v, lw, tm["u"], wkv_state,
+                                    chunk=chunk)
+    y = _head_groupnorm(tm, y) * g
+    out = jnp.einsum("bshn,hnd->bsd", y, tm["wo"])
+    return out, x[:, -1:], new_state
+
+
+def apply_channel_mix(cm: Dict, x, cfg, shift_state=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xx = _token_shift(x, shift_state)
+    xk = x + (xx - x) * cm["mu_k"]
+    xr = x + (xx - x) * cm["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, cm["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, cm["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, cm["wr"]))
+    return r * kv, x[:, -1:]

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init, adamw_update, clip_by_global_norm, global_norm)
+from repro.optim.schedule import wsd_schedule, cosine_schedule  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    int8_block_quantize, int8_block_dequantize, compress_gradients)

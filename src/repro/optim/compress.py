@@ -1,0 +1,64 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam-style
+residual correction).
+
+On a real pod this halves/quarters the bytes of the cross-pod (DCN)
+gradient all-reduce — the dominant collective of hierarchical data
+parallelism.  Numerically: grads are block-quantized to int8 with a
+per-block f32 scale; the quantization error is carried in an error
+buffer and added to the next step's gradients, so the *accumulated*
+update is unbiased.  ``repro.kernels.quantize`` provides the Pallas
+TPU kernel for the quantize hot-loop; this module is its jnp oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_block_quantize(x: jnp.ndarray, block: int = 256
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """x (any shape) -> (q int8 (nblocks, block), scales (nblocks,), pad)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale, pad
+
+
+def int8_block_dequantize(q: jnp.ndarray, scale: jnp.ndarray, pad: int,
+                          shape, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compress_gradients(grads: Any, error: Any, block: int = 256
+                       ) -> Tuple[Any, Any]:
+    """Quantize (grads + error) leafwise; return (deq grads, new error)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s, pad = int8_block_quantize(corrected, block)
+        deq = int8_block_dequantize(q, s, pad, g.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    # explicit flatten/unflatten (is_leaf=tuple would swallow
+    # tuple-structured pytrees; see adamw_update)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return deq, new_err
+
+
+def init_error_buffer(params: Any) -> Any:
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

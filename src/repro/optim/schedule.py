@@ -1,0 +1,28 @@
+"""LR schedules.  ``wsd_schedule`` is the MiniCPM warmup-stable-decay
+schedule [arXiv:2404.06395] — the paper-specific feature of the
+minicpm-2b assigned architecture."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, peak_lr: float, warmup: int, stable: int,
+                 decay: int, min_ratio: float = 0.1):
+    """Warmup (linear) -> Stable (constant) -> Decay (exponential to
+    min_ratio * peak over `decay` steps)."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    decay_start = warmup + stable
+    frac = jnp.clip((s - decay_start) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (min_ratio ** frac)
+    return jnp.where(s < decay_start, warm, dec)
+
+
+def cosine_schedule(step, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup, warm, peak_lr * cos)

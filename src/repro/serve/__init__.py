@@ -1,0 +1,2 @@
+from repro.serve.step import build_prefill_step, build_decode_step  # noqa: F401
+from repro.serve.server import BatchServer, Request  # noqa: F401

@@ -1,0 +1,125 @@
+"""Continuous-batching inference server (vLLM-style slot scheduler,
+CPU-scale).
+
+A fixed decode batch of B slots; requests from a queue are prefilled
+one at a time (B=1 prefill) and their caches inserted into free slots;
+every loop iteration advances ALL active slots by one token with a
+single batched decode step (per-slot ``cur_len`` vector).  Finished
+slots (max tokens or EOS) are freed.  The server is a SimObject with
+throughput/latency stats — and the DES can model the same policy at pod
+scale for the dse_sweep benchmark.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simobject import Param, SimObject
+from repro.models.api import Model
+from repro.serve.step import build_decode_step, build_prefill_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    extras: Dict[str, Any] = field(default_factory=dict)
+    # filled by the server:
+    output: List[int] = field(default_factory=list)
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+
+
+class BatchServer(SimObject):
+    slots = Param(int, 4, "decode batch size")
+    seq_capacity = Param(int, 128, "KV/state capacity per slot")
+
+    def __init__(self, name: str = "server", *, model: Model, params,
+                 **kw):
+        super().__init__(name, **kw)
+        self.model = model
+        self.params = params
+        self._prefill = jax.jit(build_prefill_step(
+            model, seq_capacity=self.seq_capacity))
+        self._decode = jax.jit(build_decode_step(model))
+        self.s_tokens = self.stats.scalar("tokens_out", "tokens generated")
+        self.s_requests = self.stats.scalar("requests", "requests served")
+        self.s_latency = self.stats.distribution("latency", unit="s")
+        self.s_decode_steps = self.stats.scalar("decode_steps")
+        self.s_throughput = self.stats.formula(
+            "tokens_per_decode_step",
+            lambda: self.s_tokens.value() / max(self.s_decode_steps.value(),
+                                                1))
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[Request]) -> List[Request]:
+        B = self.slots
+        cap = self.seq_capacity
+        cache = self.model.init_cache(B, cap)
+        cur_len = np.zeros((B,), np.int32)
+        last_tok = np.zeros((B, 1), np.int32)
+        active: List[Optional[Request]] = [None] * B
+        queue = list(requests)
+        for r in queue:
+            r.submit_time = time.perf_counter()
+        done: List[Request] = []
+
+        def insert(slot: int, req: Request) -> None:
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32),
+                     **{k: jnp.asarray(v)[None] for k, v in
+                        req.extras.items()}}
+            logits, rcache = self._prefill(self.params, batch)
+            nonlocal cache
+            cache = jax.tree.map(
+                lambda c, rc: jax.lax.dynamic_update_slice_in_dim(
+                    c, rc.astype(c.dtype), slot, 1),
+                cache, rcache)
+            tok = int(jax.device_get(jnp.argmax(
+                logits[0, -1].astype(jnp.float32))))
+            req.output.append(tok)
+            last_tok[slot, 0] = tok
+            cur_len[slot] = len(req.prompt)
+            active[slot] = req
+
+        while queue or any(a is not None for a in active):
+            # fill free slots
+            for slot in range(B):
+                if active[slot] is None and queue:
+                    insert(slot, queue.pop(0))
+            # one batched decode step for all active slots
+            if not any(a is not None for a in active):
+                continue
+            nxt, _, cache = self._decode(self.params, {
+                "tokens": jnp.asarray(last_tok),
+                "cache": cache,
+                "cur_len": jnp.asarray(cur_len),
+            })
+            nxt = np.asarray(jax.device_get(nxt))
+            self.s_decode_steps.inc()
+            for slot in range(B):
+                req = active[slot]
+                if req is None:
+                    continue
+                tok = int(nxt[slot, 0])
+                req.output.append(tok)
+                self.s_tokens.inc()
+                cur_len[slot] += 1
+                last_tok[slot, 0] = tok
+                finished = (len(req.output) >= req.max_new_tokens
+                            or tok == req.eos_token
+                            or cur_len[slot] >= cap - 1)
+                if finished:
+                    req.finish_time = time.perf_counter()
+                    self.s_requests.inc()
+                    self.s_latency.sample(req.finish_time - req.submit_time)
+                    done.append(req)
+                    active[slot] = None
+        return done

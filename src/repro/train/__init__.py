@@ -1,0 +1,3 @@
+from repro.train.step import (  # noqa: F401
+    TrainOptions, build_train_step, init_train_state, train_state_specs)
+from repro.train.trainer import Trainer  # noqa: F401

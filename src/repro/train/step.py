@@ -1,0 +1,188 @@
+"""Train-step builder: loss + grads + AdamW under pjit sharding.
+
+The step is structured for compute/communication overlap: with
+``accum_steps > 1`` gradients are accumulated over microbatches inside
+a ``lax.scan``, which lets XLA overlap the reduce-scatter of microbatch
+i's gradients with microbatch i+1's compute (the distributed-
+optimization trick the DES models as ``overlap=True`` collectives).
+Optional int8 gradient compression with error feedback halves the
+cross-pod gradient bytes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.api import Model
+from repro.models.common import IDENTITY_SHARDER, Sharder
+from repro.models.layers import cross_entropy
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_gradients, cosine_schedule, wsd_schedule)
+from repro.optim.compress import init_error_buffer
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"          # cosine | wsd
+    wsd_stable: int = 8000
+    wsd_decay: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    aux_weight: float = 0.01          # MoE load-balance loss weight
+    accum_steps: int = 1
+    grad_compress: bool = False       # int8 + error feedback
+    chunk: int = 2048                 # attention kv-chunk
+    moment_dtype: str = "float32"     # adam m/v dtype (bf16 at 141B scale)
+
+
+def lr_at(opts: TrainOptions, step):
+    if opts.schedule == "wsd":
+        return wsd_schedule(step, opts.peak_lr, opts.warmup,
+                            opts.wsd_stable, opts.wsd_decay)
+    return cosine_schedule(step, opts.peak_lr, opts.warmup, opts.total_steps)
+
+
+def default_options_for(cfg: ArchConfig) -> TrainOptions:
+    # minicpm trains with the WSD schedule (its paper-specific feature)
+    if cfg.name == "minicpm-2b":
+        return TrainOptions(schedule="wsd")
+    return TrainOptions()
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init_train_state(model: Model, key, opts: Optional[TrainOptions] = None
+                     ) -> Dict[str, Any]:
+    opts = opts or default_options_for(model.cfg)
+    params = model.init(key)
+    mdt = jnp.dtype(opts.moment_dtype)
+    state = {"params": params, "opt": adamw_init(params, mdt),
+             "step": jnp.zeros((), jnp.int32)}
+    if opts.grad_compress:
+        state["err"] = init_error_buffer(params)
+    return state
+
+
+def train_state_specs(model: Model, opts: Optional[TrainOptions] = None
+                      ) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical-axes tree) of the train state."""
+    opts = opts or default_options_for(model.cfg)
+    p_shapes, p_axes = model.param_specs()
+    sds = jax.ShapeDtypeStruct
+    state_shapes = {
+        "params": p_shapes,
+        "opt": {"m": p_shapes, "v": p_shapes,
+                "count": sds((), jnp.int32)},
+        "step": sds((), jnp.int32),
+    }
+    mdt = jnp.dtype(opts.moment_dtype)
+    as_m = lambda t: jax.tree.map(  # noqa: E731
+        lambda s: sds(s.shape, mdt), t)
+    state_shapes["opt"]["m"] = as_m(p_shapes)
+    state_shapes["opt"]["v"] = as_m(p_shapes)
+    state_axes = {
+        "params": p_axes,
+        "opt": {"m": p_axes, "v": p_axes, "count": ()},
+        "step": (),
+    }
+    if opts.grad_compress:
+        state_shapes["err"] = jax.tree.map(
+            lambda s: sds(s.shape, jnp.float32), p_shapes)
+        state_axes["err"] = p_axes
+    return state_shapes, state_axes
+
+
+# ---------------------------------------------------------------------------
+# step
+# ---------------------------------------------------------------------------
+
+def build_train_step(model: Model, opts: Optional[TrainOptions] = None,
+                     sharder: Sharder = IDENTITY_SHARDER,
+                     param_axes: Any = None) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (pure).
+
+    ``param_axes``: logical-axes tree matching the params.  When given,
+    gradients are constrained to the PARAMETER sharding at the point of
+    production.  Without this, XLA has no cotangent sharding to
+    propagate and materializes replicated gradients — measured at jamba
+    train_4k scale as a 14 GB/device gradient buffer and an all-reduce
+    (instead of reduce-scatter) gradient sync.
+    """
+    cfg = model.cfg
+    opts = opts or default_options_for(cfg)
+
+    def _is_axes_leaf(x):
+        return isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+
+    def shard_like_params(grads):
+        if param_axes is None:
+            return grads
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_a = jax.tree.flatten(param_axes, is_leaf=_is_axes_leaf)[0]
+        out = [sharder.ac(g, tuple(a)) for g, a in zip(flat_g, flat_a)]
+        return jax.tree.unflatten(treedef, out)
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch, sharder=sharder,
+                                         chunk=opts.chunk)
+        loss = cross_entropy(logits, batch["labels"], cfg,
+                             mask=batch.get("mask"))
+        return loss + opts.aux_weight * aux, (loss, aux)
+
+    def grads_of(params, batch):
+        (tot, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return shard_like_params(grads), loss, aux
+
+    def train_step(state, batch):
+        params = state["params"]
+        if opts.accum_steps > 1:
+            def micro(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                g, l, a = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), ()
+
+            mb0 = jax.tree.map(
+                lambda x: x.reshape((opts.accum_steps,
+                                     x.shape[0] // opts.accum_steps)
+                                    + x.shape[1:]) if x.ndim else
+                jnp.broadcast_to(x, (opts.accum_steps,)), batch)
+            zeros = shard_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss, aux), _ = jax.lax.scan(
+                micro, (zeros, 0.0, 0.0), mb0)
+            inv = 1.0 / opts.accum_steps
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, aux = loss * inv, aux * inv
+        else:
+            grads, loss, aux = grads_of(params, batch)
+
+        new_state = dict(state)
+        if opts.grad_compress:
+            grads, new_err = compress_gradients(grads, state["err"])
+            new_state["err"] = new_err
+        grads, gnorm = clip_by_global_norm(grads, opts.clip_norm)
+        lr = lr_at(opts, state["step"])
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], params, lr,
+            weight_decay=opts.weight_decay)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr": lr}
+        return new_state, metrics
+
+    return train_step

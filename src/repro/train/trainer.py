@@ -1,0 +1,98 @@
+"""Trainer: the driver loop as a SimObject (gem5-style composition).
+
+The trainer is configured like every other g5x component — Params +
+children (checkpoint manager, watchdog, heartbeat) — and exports a
+stats group (loss, step-time distribution, straggler count, checkpoint
+count) into the system tree.  Fault injection for tests: pass
+``fail_at={step: exception}`` and the trainer demonstrates
+checkpoint-restore recovery.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.core.simobject import Param, SimObject
+from repro.data.pipeline import SyntheticPipeline
+from repro.train.ft import Heartbeat, StragglerWatchdog
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class Trainer(SimObject):
+    ckpt_interval = Param(int, 50, "steps between checkpoints")
+    log_interval = Param(int, 10, "steps between metric logs")
+    max_retries = Param(int, 3, "restore attempts after failures")
+
+    def __init__(self, name: str = "trainer", *, model, train_step: Callable,
+                 pipeline: SyntheticPipeline, state: Any,
+                 ckpt_dir: Optional[str] = None,
+                 heartbeat_path: Optional[str] = None, **kw):
+        super().__init__(name, **kw)
+        self.model = model
+        self.train_step = train_step
+        self.pipeline = pipeline
+        self.state = state
+        self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)
+        self.watchdog = StragglerWatchdog()
+        self.heartbeat = Heartbeat(heartbeat_path) if heartbeat_path else None
+        self._jitted = jax.jit(train_step, donate_argnums=(0,))
+        # stats
+        self.s_loss = self.stats.scalar("loss", "last loss")
+        self.s_steps = self.stats.scalar("steps", "steps completed")
+        self.s_failures = self.stats.scalar("failures", "failures recovered")
+        self.s_stragglers = self.stats.scalar("stragglers", "slow steps")
+        self.s_step_time = self.stats.distribution("step_time", unit="s")
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int,
+            fail_at: Optional[Dict[int, Exception]] = None) -> Dict:
+        """Run ``num_steps``; simulated failures trigger restore+retry."""
+        fail_at = dict(fail_at or {})
+        retries = 0
+        step = int(jax.device_get(self.state["step"]))
+        end = step + num_steps
+        while step < end:
+            try:
+                if step in fail_at:
+                    exc = fail_at.pop(step)
+                    raise exc
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in self.pipeline.batch(step).items()}
+                t0 = time.perf_counter()
+                self.state, metrics = self._jitted(self.state, batch)
+                loss = float(jax.device_get(metrics["loss"]))
+                dt = time.perf_counter() - t0
+                if self.watchdog.record(step, dt):
+                    self.s_stragglers.inc()
+                self.s_step_time.sample(dt)
+                self.s_loss.set(loss)
+                self.s_steps.inc()
+                self.history.append({"step": step, "loss": loss,
+                                     "time_s": dt})
+                if self.heartbeat:
+                    self.heartbeat.beat(step)
+                step += 1
+                if self.ckpt and step % self.ckpt_interval == 0:
+                    self.ckpt.save(self.state, step)
+            except SimulatedFailure:
+                self.s_failures.inc()
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                if self.ckpt and self.ckpt.latest_step() is not None:
+                    self.state = self.ckpt.restore(self.state)
+                    step = int(jax.device_get(self.state["step"]))
+                # else: continue from in-memory state (lost step)
+        if self.ckpt:
+            self.ckpt.save(self.state, step)
+            self.ckpt.wait()
+        return {"final_step": step, "history": self.history,
+                "stragglers": self.watchdog.flagged}

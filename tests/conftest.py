@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py
+forces 512 placeholder devices (and only in its own process)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,102 @@
+"""Checkpoint atomicity/restore/resharding + fault-tolerance machinery."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import REGISTRY, get_config
+from repro.train.ft import (Heartbeat, StragglerWatchdog, plan_elastic_mesh)
+
+
+def state_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.zeros((4,))},
+            "opt": {"m": jnp.ones((8, 4))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    st_ = state_tree()
+    mgr.save(st_, 7)
+    restored = mgr.restore(st_)
+    for a, b in zip(jax.tree.leaves(st_), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(state_tree(0), 5)
+    mgr.save(state_tree(1), 10)          # waits for the first internally
+    mgr.wait()
+    assert mgr.latest_step() == 10
+
+
+def test_keep_n_pruning(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(state_tree(s), s)
+    assert mgr.available_steps() == [3, 4]
+
+
+def test_atomicity_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(state_tree(), 3)
+    # a stale .tmp dir (simulated crash) is not a valid checkpoint
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert mgr.latest_step() == 3
+
+
+def test_restore_with_dtype_cast(tmp_path):
+    """Resharding restore path: restore into bf16 target specs."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    st_ = state_tree()
+    mgr.save(st_, 1)
+    target = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, st_)
+    restored = mgr.restore(target)
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+
+
+def test_watchdog_flags_stragglers():
+    wd = StragglerWatchdog(threshold=2.0)
+    for i in range(10):
+        assert not wd.record(i, 1.0)
+    assert wd.record(10, 5.0)
+    assert wd.flagged == [(10, 5.0)]
+
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(os.path.join(str(tmp_path), "hb.json"))
+    assert hb.age() is None and not hb.alive()
+    hb.beat(3)
+    assert hb.alive(max_age=60)
+    assert hb.age() < 5
+
+
+@given(st.integers(1, 600))
+@settings(max_examples=40, deadline=None)
+def test_elastic_planner_properties(chips):
+    """For every arch and surviving-chip count: plan is valid."""
+    for arch in ("deepseek-67b", "minicpm-2b", "whisper-small"):
+        cfg = get_config(arch)
+        plan = plan_elastic_mesh(cfg, chips)
+        data, model = plan.shape
+        assert plan.chips == data * model <= chips
+        assert cfg.d_ff % model == 0
+        assert cfg.d_model % data == 0
+
+
+def test_elastic_planner_prefers_big_mesh():
+    cfg = get_config("deepseek-67b")
+    assert plan_elastic_mesh(cfg, 256).chips == 256
+    assert plan_elastic_mesh(cfg, 255).chips == 128
+    assert plan_elastic_mesh(cfg, 1).chips == 1

@@ -1,0 +1,107 @@
+"""Collective algorithm plug-ins + event-driven executor (paper §2.12,
+§2.13, §2.17 analogues)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.desim.collectives import (ALGORITHMS, best_algorithm,
+                                          get_algorithm)
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.network import TorusNetwork, build_networks
+from repro.core.desim.trace import analytic_trace
+
+
+def cluster(pods=1):
+    c = ClusterModel("c", num_pods=pods)
+    c.instantiate()
+    return c
+
+
+KINDS = ["all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute"]
+
+
+@given(st.sampled_from(list(ALGORITHMS)), st.sampled_from(KINDS),
+       st.floats(1e3, 1e12), st.sampled_from([2, 4, 16, 64, 256]))
+@settings(max_examples=60, deadline=None)
+def test_cost_nonnegative_and_monotone(alg_name, kind, nbytes, n):
+    m = cluster()
+    alg = get_algorithm(alg_name)
+    t1 = alg.time_s(kind, nbytes, n, m)
+    t2 = alg.time_s(kind, nbytes * 2, n, m)
+    assert t1 >= 0 and t2 >= t1 * 0.99
+
+
+def test_bidir_halves_ring_bandwidth_term():
+    m = cluster()
+    big = 1e9
+    ring = get_algorithm("ring").time_s("all-reduce", big, 16, m)
+    bidir = get_algorithm("bidir-ring").time_s("all-reduce", big, 16, m)
+    assert bidir < ring
+    assert bidir == pytest.approx(ring / 2, rel=0.05)
+
+
+def test_best_algorithm_is_min():
+    m = cluster()
+    name, t = best_algorithm("all-reduce", 1e8, 256, m)
+    for alg in ALGORITHMS.values():
+        assert t <= alg.time_s("all-reduce", 1e8, 256, m) + 1e-12
+
+
+def test_executor_overlap_hides_collectives():
+    m = cluster()
+    colls = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+    tr_sync = analytic_trace("sync", 8, 1e12, 1e9, colls, overlap=False)
+    tr_ovl = analytic_trace("ovl", 8, 1e12, 1e9, colls, overlap=True)
+    t_sync = TraceExecutor(m).execute(tr_sync)
+    t_ovl = TraceExecutor(m).execute(tr_ovl)
+    assert t_ovl.makespan_s <= t_sync.makespan_s
+    assert t_ovl.summary()["overlap_efficiency"] >= \
+        t_sync.summary()["overlap_efficiency"]
+
+
+@given(st.floats(1.0, 4.0))
+@settings(max_examples=20, deadline=None)
+def test_executor_straggler_scales_makespan(slow):
+    m = cluster(pods=2)
+    tr = analytic_trace("t", 4, 1e12, 1e9, [])
+    base = TraceExecutor(m).execute(tr).makespan_s
+    slowed = TraceExecutor(m, straggler_slowdowns=[1.0, slow]).execute(tr)
+    assert slowed.makespan_s == pytest.approx(base * slow, rel=1e-6)
+
+
+def test_elastic_trace_property_hbm_doubling():
+    """gem5 §2.8 'elastic': same trace, new machine params, new timing."""
+    m1, m2 = cluster(), cluster()
+    m2.pod.chip._params["hbm_bw"] = m1.pod.chip.hbm_bw * 2
+    # memory-bound trace: bytes/hbm >> flops/peak
+    tr = analytic_trace("mem", 8, 1e9, 1e12, [])
+    t1 = TraceExecutor(m1).execute(tr).makespan_s
+    t2 = TraceExecutor(m2).execute(tr).makespan_s
+    assert t2 == pytest.approx(t1 / 2, rel=0.01)
+
+
+def test_torus_routing_and_contention():
+    net = TorusNetwork(4, 4, link_bw=1e9, hop_latency=1e-6)
+    hops = net.route((0, 0), (2, 3))
+    assert len(hops) == 2 + 1          # wrap: dy=3 -> 1 hop backwards
+    t1 = net.send(0.0, (0, 0), (1, 0), 1e6)
+    t2 = net.send(0.0, (0, 0), (1, 0), 1e6)   # same link -> serializes
+    assert t2 > t1
+    rep = net.occupancy_report()
+    assert rep["links_used"] >= 1 and rep["total_bytes"] == 2e6
+
+
+def test_dcn_quantum_rounding():
+    m = cluster(pods=2)
+    tr = analytic_trace("x", 1, 1e10, 1e8, [],
+                        tail_collectives=[{"kind": "all-reduce",
+                                           "bytes": 1e9,
+                                           "participants": 512,
+                                           "scope": "dcn"}])
+    res = TraceExecutor(m).execute(tr)
+    q = m.quantum_ns / 1e9
+    # dcn completion snapped to a quantum boundary
+    assert (res.makespan_s / q) == pytest.approx(round(res.makespan_s / q),
+                                                 abs=1e-6)

@@ -1,0 +1,87 @@
+"""Deterministic event engine + dist-gem5 quantum sync (paper §1.3.1,
+§2.17)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import EventQueue, QuantumSync, SimExit
+
+
+def test_priority_then_insertion_order():
+    q = EventQueue()
+    order = []
+    q.schedule(lambda: order.append("b"), 10)
+    q.schedule(lambda: order.append("a"), 10, priority=-1)
+    q.schedule(lambda: order.append("c"), 10)
+    q.run()
+    assert order == ["a", "b", "c"]
+
+
+def test_cannot_schedule_in_past():
+    q = EventQueue()
+    q.schedule(lambda: None, 5)
+    q.run()
+    with pytest.raises(ValueError):
+        q.schedule(lambda: None, 1)
+
+
+def test_squash():
+    q = EventQueue()
+    fired = []
+    ev = q.schedule(lambda: fired.append(1), 5)
+    ev.squash()
+    q.run()
+    assert fired == [] and not ev.scheduled()
+
+
+def test_sim_exit():
+    q = EventQueue()
+
+    def boom():
+        raise SimExit("checkpoint")
+    q.schedule(boom, 3)
+    q.schedule(lambda: None, 10)
+    assert q.run() == "checkpoint"
+    assert q.now == 3
+
+
+@given(st.lists(st.tuples(st.integers(0, 1000), st.integers(-5, 5)),
+                min_size=1, max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_determinism_property(events):
+    """Two queues fed identical schedules fire in identical order."""
+    def run_once():
+        q = EventQueue()
+        log = []
+        for i, (t, p) in enumerate(events):
+            q.schedule(lambda i=i: log.append(i), t, priority=p)
+        q.run()
+        return log
+    assert run_once() == run_once()
+
+
+def test_quantum_sync_barriers_and_delivery():
+    qa, qb = EventQueue("a"), EventQueue("b")
+    sync = QuantumSync([qa, qb], quantum=100)
+    got = []
+    # message sent at t=10 with latency 50 -> delivered at boundary 100
+    sync.send(10, qb, lambda: got.append(qb.now), latency=50)
+    sync.run(max_tick=500)
+    assert sync.barriers == 5
+    assert got and got[0] >= 100 and got[0] % 100 == 0
+
+
+@given(st.integers(1, 10), st.integers(1, 400))
+@settings(max_examples=25, deadline=None)
+def test_quantum_sync_never_delivers_early(quantum_mult, latency):
+    """Cross-queue messages arrive at a quantum boundary >= send+latency."""
+    quantum = 50 * quantum_mult
+    qa, qb = EventQueue(), EventQueue()
+    sync = QuantumSync([qa, qb], quantum=quantum)
+    got = []
+    sync.send(25, qb, lambda: got.append(qb.now), latency=latency)
+    sync.run(max_tick=quantum * 20 + latency + 100)
+    assert got
+    t = got[0]
+    assert t >= 25 + min(latency, quantum)
+    assert t % quantum == 0

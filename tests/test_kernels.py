@@ -1,0 +1,112 @@
+"""Pallas kernel validation (interpret=True) against pure-jnp oracles,
+sweeping shapes and dtypes per the assignment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_mlp.ops import expert_mlp
+from repro.kernels.moe_mlp.ref import expert_mlp_ref
+from repro.kernels.quantize.ops import quantize
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.kernels.rwkv6_wkv.ops import wkv6
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("b,s,h,d,win,bq,bk", [
+    (2, 256, 4, 64, 0, 128, 128),
+    (1, 512, 2, 128, 0, 128, 128),
+    (2, 256, 4, 64, 128, 64, 64),
+    (1, 128, 8, 32, 0, 64, 32),
+    (3, 192, 2, 64, 0, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, s, h, d, win, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,n,chunk", [
+    (2, 128, 2, 64, 64),
+    (1, 256, 4, 32, 32),
+    (2, 64, 1, 16, 16),
+    (1, 96, 2, 32, 32),
+])
+def test_wkv6(b, s, h, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, s, h, n), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, n), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, n), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n)) - 1.0)
+    u = 0.5 * jax.random.normal(ks[4], (h, n), jnp.float32)
+    y = wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, _ = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_wkv6_strong_decay_numerics():
+    """Strong decay (w -> 0) must not overflow: the pairwise-difference
+    formulation keeps every exponent <= 0."""
+    b, s, h, n = 1, 128, 1, 32
+    ks = jax.random.split(KEY, 4)
+    r = jax.random.normal(ks[0], (b, s, h, n), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, n), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, n), jnp.float32)
+    w = jnp.full((b, s, h, n), 1e-3, jnp.float32)       # aggressive decay
+    u = jnp.zeros((h, n), jnp.float32)
+    y = wkv6(r, k, v, w, u, chunk=64, interpret=True)
+    yr, _ = wkv6_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("g,e,c,d,f,bc,bf", [
+    (2, 4, 128, 64, 256, 64, 128),
+    (1, 2, 64, 128, 512, 64, 256),
+    (2, 2, 128, 32, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_mlp(g, e, c, d, f, bc, bf, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (g, e, c, d)).astype(dtype)
+    wi = (jax.random.normal(ks[1], (e, d, f)) / np.sqrt(d)).astype(dtype)
+    wg = (jax.random.normal(ks[2], (e, d, f)) / np.sqrt(d)).astype(dtype)
+    wo = (jax.random.normal(ks[3], (e, f, d)) / np.sqrt(f)).astype(dtype)
+    out = expert_mlp(x, wi, wg, wo, block_c=bc, block_f=bf, interpret=True)
+    ref = expert_mlp_ref(x.astype(jnp.float32), wi.astype(jnp.float32),
+                         wg.astype(jnp.float32), wo.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n", [256, 1000, 4096, 65536])
+def test_quantize(n):
+    x = jax.random.normal(KEY, (n,), jnp.float32) * 3.0
+    q, s, pad = quantize(x, block=256, interpret=True)
+    blocks = jnp.pad(x, (0, pad)).reshape(-1, 256)
+    qr, sr = quantize_ref(blocks)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    # quantization error bounded by scale/2 per element
+    deq = dequantize_ref(q, s)
+    err = np.abs(np.asarray(deq) - np.asarray(blocks))
+    assert (err <= np.asarray(s)[:, None] / 2 + 1e-7).all()

@@ -1,0 +1,119 @@
+"""Property-based tests on layer invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, smoke
+from repro.models import layers as ll
+from repro.models.common import IDENTITY_SHARDER
+
+CFG = smoke(get_config("stablelm-1.6b"))
+KEY = jax.random.PRNGKey(3)
+
+
+@given(st.integers(1, 3), st.sampled_from([16, 32, 64]),
+       st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norm(b, s, h):
+    """Rotary embedding is a rotation: per-pair L2 norms are invariant."""
+    from dataclasses import replace
+    cfg = replace(CFG, rope_pct=1.0, n_heads=h, d_head=16)
+    x = jax.random.normal(KEY, (b, s, h, 16), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = ll.apply_rope(cfg, x, pos)
+    nx = jnp.linalg.norm(x, axis=-1)
+    ny = jnp.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(np.asarray(nx), np.asarray(ny), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """Score q_i . k_j after RoPE depends only on i - j."""
+    from dataclasses import replace
+    cfg = replace(CFG, rope_pct=1.0, n_heads=1, d_head=16)
+    q = jnp.ones((1, 8, 1, 16))
+    k = jnp.ones((1, 8, 1, 16)) * 0.5
+    pos = jnp.arange(8)[None, :]
+    qr = ll.apply_rope(cfg, q, pos)
+    kr = ll.apply_rope(cfg, k, pos)
+    s = jnp.einsum("bqhd,bkhd->bqk", qr, kr)[0]
+    # all (i, j) with equal i-j have equal scores
+    for delta in (1, 3):
+        vals = [float(s[i, i - delta]) for i in range(delta, 8)]
+        assert max(vals) - min(vals) < 1e-4
+
+
+@given(st.sampled_from([32, 64, 128]), st.sampled_from([16, 32, 64]),
+       st.sampled_from([0, 24]))
+@settings(max_examples=12, deadline=None)
+def test_blockwise_equals_naive(s, chunk, window):
+    """Online-softmax blockwise attention == naive attention."""
+    b, h, d = 2, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    naive = ll.naive_causal_attention(q, k, v, pos, pos, window=window)
+    block = ll.blockwise_attention(q, k, v, pos, pos, window=window,
+                                   chunk=chunk)
+    np.testing.assert_allclose(np.asarray(block), np.asarray(naive),
+                               atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(5, 40), st.sampled_from([8, 16]))
+@settings(max_examples=15, deadline=None)
+def test_kv_cache_ring_buffer_consistency(s, cap):
+    """kv_to_cache slot layout matches decode's ring-buffer writes:
+    token t lives at slot t % capacity, keeping the last cap tokens."""
+    kvh, hd = 2, 4
+    k = jnp.arange(s, dtype=jnp.float32)[None, :, None, None]
+    k = jnp.broadcast_to(k, (1, s, kvh, hd))
+    cache = ll.kv_to_cache(k, k, cap, IDENTITY_SHARDER)
+    ck = np.asarray(cache["k"])           # (1, kvh, cap, hd)
+    for t in range(max(0, s - cap), s):
+        assert ck[0, 0, t % cap, 0] == t
+
+
+def test_decode_per_slot_matches_scalar():
+    """Vector cur_len with equal entries == scalar cur_len decode."""
+    cfg = CFG
+    key = KEY
+    p = ll.init_attention(key, cfg)
+    from repro.models.common import unzip
+    params, _ = unzip(p)
+    b, S = 2, 16
+    cache = {"k": jax.random.normal(key, (b, cfg.n_kv_heads, S,
+                                          cfg.head_dim), jnp.float32),
+             "v": jax.random.normal(key, (b, cfg.n_kv_heads, S,
+                                          cfg.head_dim), jnp.float32)}
+    x = jax.random.normal(key, (b, 1, cfg.d_model), jnp.float32)
+    y1, c1 = ll.attention_decode(params, x, cfg, cache,
+                                 jnp.asarray(5), IDENTITY_SHARDER)
+    y2, c2 = ll.attention_decode(params, x, cfg, cache,
+                                 jnp.asarray([5, 5]), IDENTITY_SHARDER)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1["k"]), np.asarray(c2["k"]),
+                               atol=1e-6)
+
+
+def test_cross_entropy_vocab_padding_invariant():
+    """Padded vocab positions must not change the loss."""
+    from repro.configs import get_config
+    cfg = get_config("minicpm-2b")     # vocab 122753 -> padded 122880
+    b, s, v = 2, 8, cfg.vocab_size
+    vp = ll.padded_vocab(cfg)
+    assert vp > v
+    logits_real = jax.random.normal(KEY, (b, s, v), jnp.float32)
+    labels = jax.random.randint(KEY, (b, s), 0, v)
+    # same logits with huge garbage in the padded tail
+    pad = jnp.full((b, s, vp - v), 37.0)
+    logits_padded = jnp.concatenate([logits_real, pad], axis=-1)
+    l_pad = ll.cross_entropy(logits_padded, labels, cfg)
+
+    class VCfg:
+        vocab_size = v
+    l_real = ll.cross_entropy(logits_real, labels, VCfg)
+    np.testing.assert_allclose(float(l_pad), float(l_real), rtol=1e-5)

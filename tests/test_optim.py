@@ -1,0 +1,79 @@
+"""Optimizer, schedules, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_gradients, cosine_schedule,
+                         int8_block_dequantize, int8_block_quantize,
+                         wsd_schedule)
+from repro.optim.compress import init_error_buffer
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(grads, state, params, lr=0.1,
+                                     weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    total = jnp.sqrt(clipped["a"] ** 2 + clipped["b"] ** 2)
+    assert float(total[0]) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_wsd_schedule_phases():
+    peak = 1e-3
+    lr = lambda s: float(wsd_schedule(s, peak, warmup=10, stable=100,  # noqa
+                                      decay=50))
+    assert lr(0) == 0.0
+    assert lr(5) == pytest.approx(peak / 2)
+    assert lr(10) == pytest.approx(peak)
+    assert lr(60) == pytest.approx(peak)          # stable phase
+    assert lr(115) < peak                          # decaying
+    assert lr(160) == pytest.approx(peak * 0.1, rel=1e-3)
+
+
+def test_cosine_schedule():
+    peak = 1.0
+    assert float(cosine_schedule(0, peak, 10, 100)) == 0.0
+    assert float(cosine_schedule(10, peak, 10, 100)) == pytest.approx(peak)
+    assert float(cosine_schedule(100, peak, 10, 100)) == pytest.approx(0.1)
+
+
+@given(st.integers(1, 2000))
+@settings(max_examples=20, deadline=None)
+def test_int8_roundtrip_error_bound(n):
+    x = np.random.default_rng(n).normal(size=(n,)).astype(np.float32) * 5
+    q, s, pad = int8_block_quantize(jnp.asarray(x), block=128)
+    deq = int8_block_dequantize(q, s, pad, x.shape)
+    scales = np.repeat(np.asarray(s), 128)[:n]
+    assert (np.abs(np.asarray(deq) - x) <= scales / 2 + 1e-6).all()
+
+
+def test_error_feedback_unbiased_accumulation():
+    """Sum of compressed grads + final error == sum of true grads."""
+    rng = np.random.default_rng(0)
+    grads_seq = [jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+                 for _ in range(20)]
+    params = {"w": jnp.zeros(512)}
+    err = init_error_buffer(params)
+    applied = jnp.zeros(512)
+    for g in grads_seq:
+        deq, err = compress_gradients({"w": g}, err)
+        applied = applied + deq["w"]
+    true = sum(np.asarray(g) for g in grads_seq)
+    residual = np.asarray(err["w"])
+    np.testing.assert_allclose(np.asarray(applied) + residual, true,
+                               atol=1e-3)
+    # and the residual is small relative to the applied sum
+    assert np.linalg.norm(residual) < 0.05 * np.linalg.norm(true) + 1.0

@@ -1,0 +1,74 @@
+"""Sharding-rule unit tests on a mock production mesh (no multi-device
+runtime needed: rules only read axis names/sizes)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, SHAPES, get_config, get_shape
+from repro.dist.sharding import Rules, make_rules
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+SINGLE = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_heads_fallback_for_indivisible_archs():
+    shape = get_shape("train_4k")
+    for arch, expect in [("stablelm-1.6b", ("model",)),
+                         ("deepseek-67b", ("model",)),
+                         ("minicpm-2b", None),       # 36 heads % 16 != 0
+                         ("qwen2-vl-7b", None),      # 28 heads
+                         ("whisper-small", None)]:   # 12 heads
+        r = make_rules(get_config(arch), shape, SINGLE)
+        assert r.mapping["heads"] == expect, arch
+        # context parallelism replaces head TP
+        if expect is None:
+            assert r.mapping["q_seq"] == ("model",)
+
+
+def test_kv_heads_fallback():
+    shape = get_shape("train_4k")
+    r = make_rules(get_config("deepseek-67b"), shape, SINGLE)
+    assert r.mapping["kv_heads"] is None        # kv=8 % 16 != 0
+    r = make_rules(get_config("stablelm-1.6b"), shape, SINGLE)
+    assert r.mapping["kv_heads"] == ("model",)  # kv=32
+
+
+def test_batch_hierarchical_dp():
+    r = make_rules(get_config("stablelm-1.6b"), get_shape("train_4k"),
+                   MULTI)
+    assert r.mapping["batch"] == ("pod", "data")
+    # long_500k batch=1: unshardable
+    r = make_rules(get_config("rwkv6-7b"), get_shape("long_500k"), MULTI)
+    assert r.mapping["batch"] is None
+
+
+def test_kv_seq_rule_sliding_window():
+    # mixtral decode cache capacity = window 4096 -> divisible by 16
+    r = make_rules(get_config("mixtral-8x22b"), get_shape("decode_32k"),
+                   SINGLE)
+    assert r.mapping["kv_seq"] == ("model",)
+
+
+def test_spec_no_duplicate_mesh_axes():
+    r = Rules({"a": ("model",), "b": ("model",), "c": ("pod", "data")})
+    spec = r.spec(("a", "b", "c"))
+    # second use of "model" dropped (PartitionSpec axes must be unique)
+    assert spec[0] == "model" and spec[1] is None
+
+
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_rules_build_for_every_cell(arch, shape):
+    for mesh in (SINGLE, MULTI):
+        r = make_rules(get_config(arch), get_shape(shape), mesh)
+        # every logical axis resolves to a valid spec
+        p = r.spec(("batch", "seq", "embed", "mlp", "heads", "kv_heads",
+                    "vocab", "q_seq", "kv_seq"))
+        assert p is not None

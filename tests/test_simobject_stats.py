@@ -1,0 +1,91 @@
+"""SimObject param system + hierarchical stats (paper §1.3, §2.21.1)."""
+
+import pytest
+
+from repro.core.ports import Port, PortError, PortSet
+from repro.core.simobject import Param, ParamError, SimObject
+from repro.core.stats import StatGroup, TimeSeries
+
+
+class Cache(SimObject):
+    size_kb = Param(int, 32, "size", check=lambda v: v > 0)
+    policy = Param(str, "lru", choices=("lru", "fifo"))
+
+
+class Core(SimObject):
+    width = Param(int, 4)
+
+
+def test_param_defaults_and_coercion():
+    c = Cache(size_kb="64")
+    assert c.size_kb == 64 and c.policy == "lru"
+
+
+def test_param_validation():
+    with pytest.raises(ParamError):
+        Cache(size_kb=-1)
+    with pytest.raises(ParamError):
+        Cache(policy="rand")
+    with pytest.raises(ParamError):
+        Cache(bogus=1)
+
+
+def test_hierarchy_paths_and_freeze():
+    sys_ = SimObject("system")
+    sys_.core = Core()
+    sys_.core.l1 = Cache(size_kb=64)
+    assert sys_.find("core.l1").size_kb == 64
+    assert sys_.core.l1.path == "system.core.l1"
+    sys_.instantiate()
+    with pytest.raises(ParamError):
+        sys_.core.width = 8
+
+
+def test_stats_tree_and_subtree_dump():
+    sys_ = SimObject("system")
+    sys_.core = Core()
+    s = sys_.core.stats.scalar("ipc", "instr per cycle")
+    s.set(1.5)
+    sys_.instantiate()
+    flat = sys_.stats.flat()
+    assert flat["system.core.ipc"] == 1.5
+    # subtree dump (gem5: "dump statistics for a subset of the graph")
+    assert sys_.core.stats.flat() == {"core.ipc": 1.5}
+
+
+def test_distribution_and_formula():
+    g = StatGroup("g")
+    d = g.distribution("lat")
+    for v in (1.0, 2.0, 3.0):
+        d.sample(v)
+    assert d.mean == pytest.approx(2.0)
+    n = g.scalar("n")
+    n.set(4)
+    f = g.formula("half", lambda: n.value() / 2)
+    assert f.value() == 2.0
+    g.reset()
+    assert d.count == 0
+
+
+def test_timeseries():
+    g = StatGroup("g")
+    s = g.scalar("x")
+    ts = TimeSeries(g)
+    for t in range(3):
+        s.set(t * 10)
+        ts.sample(float(t))
+    assert ts.column("g.x") == [0, 10, 20]
+
+
+def test_ports_protocol_and_roles():
+    a, b = object(), object()
+    pa = PortSet(a).requestor("mem", "pkt")
+    pb = PortSet(b).responder("cpu_side", "pkt", handler=lambda p: p + 1)
+    pa.connect(pb)
+    assert pa.send(41) == 42
+    with pytest.raises(PortError):
+        Port(a, "x", "pkt", "requestor").connect(
+            Port(b, "y", "other", "responder"))
+    with pytest.raises(PortError):
+        Port(a, "x", "pkt", "requestor").connect(
+            Port(b, "y", "pkt", "requestor"))

@@ -1,0 +1,99 @@
+"""§Perf hillclimbing driver for the three selected cells.
+
+For each cell: baseline (shipped config) + the enumerated candidate
+changes; every variant re-lowers, re-compiles, re-analyzes; results go
+to results/perf/<cell>.json for EXPERIMENTS.md §Perf.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import TRAIN_ACCUM, dryrun_cell
+from repro.train.step import default_options_for
+from repro.configs import get_config
+
+os.makedirs("results/perf", exist_ok=True)
+
+
+def opts_for(arch, shape_kind, **kw):
+    base = default_options_for(get_config(arch))
+    kw.setdefault("accum_steps",
+                  TRAIN_ACCUM.get(arch, 1) if shape_kind == "train" else 1)
+    kw.setdefault("moment_dtype",
+                  "bfloat16" if arch in ("mixtral-8x22b", "jamba-v0.1-52b")
+                  else "float32")
+    return dataclasses.replace(base, **kw)
+
+
+def run(cell_name, variants):
+    out = []
+    for name, kwargs in variants:
+        res = dryrun_cell(**kwargs)
+        r = res["roofline"]
+        row = {
+            "variant": name,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "bound_s": r["bound_s"],
+            "mem_gb": res["memory"]["per_device_total"] / 1e9,
+            "fits": res["fits_hbm"],
+            "collectives": res["collectives"],
+        }
+        out.append(row)
+        print(f"{cell_name}/{name:34s} comp={r['compute_s']:8.3f} "
+              f"mem={r['memory_s']:8.3f} coll={r['collective_s']:8.3f} "
+              f"dom={r['dominant']:10s} hbm={row['mem_gb']:5.1f}GB "
+              f"fits={row['fits']}", flush=True)
+    with open(f"results/perf/{cell_name}.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell 1: olmoe-1b-7b train_4k — most collective-bound
+# ---------------------------------------------------------------------------
+A = "olmoe-1b-7b"
+run("olmoe_train4k", [
+    ("baseline(accum4)", dict(arch=A, shape_name="train_4k")),
+    ("accum2", dict(arch=A, shape_name="train_4k",
+                    opts=opts_for(A, "train", accum_steps=2))),
+    ("accum1", dict(arch=A, shape_name="train_4k",
+                    opts=opts_for(A, "train", accum_steps=1))),
+    ("accum2+chunk4096", dict(arch=A, shape_name="train_4k",
+                              opts=opts_for(A, "train", accum_steps=2,
+                                            chunk=4096))),
+])
+
+# ---------------------------------------------------------------------------
+# Cell 2: deepseek-67b train_4k — flagship dense training (memory-dominated)
+# ---------------------------------------------------------------------------
+B = "deepseek-67b"
+run("deepseek_train4k", [
+    ("baseline(accum8,chunk2048)", dict(arch=B, shape_name="train_4k")),
+    ("accum4", dict(arch=B, shape_name="train_4k",
+                    opts=opts_for(B, "train", accum_steps=4))),
+    ("chunk4096", dict(arch=B, shape_name="train_4k",
+                       opts=opts_for(B, "train", chunk=4096))),
+    ("accum4+chunk4096", dict(arch=B, shape_name="train_4k",
+                              opts=opts_for(B, "train", accum_steps=4,
+                                            chunk=4096))),
+])
+
+# ---------------------------------------------------------------------------
+# Cell 3: stablelm-1.6b decode_32k — worst roofline-fraction family
+# ---------------------------------------------------------------------------
+C = "stablelm-1.6b"
+run("stablelm_decode32k", [
+    ("baseline(f32 params)", dict(arch=C, shape_name="decode_32k")),
+    ("bf16 serving params", dict(arch=C, shape_name="decode_32k",
+                                 serve_param_dtype=jnp.bfloat16)),
+    ("bf16+batch_over_all", dict(
+        arch=C, shape_name="decode_32k", serve_param_dtype=jnp.bfloat16,
+        rules_override={"batch": ("data",), "kv_seq": ("model",)})),
+])
+print("hillclimb done")

@@ -1,0 +1,25 @@
+"""Inject generated tables into EXPERIMENTS.md placeholders."""
+
+import json
+
+from gen_experiments_tables import (before_after, dryrun_table, frac,
+                                    roofline_table)
+
+rows = json.load(open("results/dryrun/summary.json"))
+v0 = json.load(open("results/dryrun_v0_baseline/summary.json"))
+
+dr = ("### Single-pod mesh (16×16 = 256 chips)\n\n"
+      + dryrun_table(rows, "single")
+      + "\n\n### Multi-pod mesh (2×16×16 = 512 chips)\n\n"
+      + dryrun_table(rows, "multi"))
+rl = roofline_table(rows)
+ba = ("Per-cell before/after of the §Perf global iterations "
+      "(v0 = paper-faithful naive baseline, v4 = shipped):\n\n"
+      + before_after(v0, rows))
+
+text = open("EXPERIMENTS.md").read()
+text = text.replace("<!-- DRYRUN_TABLES -->", dr)
+text = text.replace("<!-- ROOFLINE_TABLE -->", rl + "\n\n" + ba)
+open("EXPERIMENTS.md", "w").write(text)
+print("injected:",
+      dr.count("\n"), "dryrun lines,", rl.count("\n"), "roofline lines")
