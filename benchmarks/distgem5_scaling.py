@@ -1,8 +1,10 @@
 """Paper claim §2.17 (dist-gem5): parallel multi-node simulation with
 quantum-based synchronization.  Measures (a) the in-process QuantumSync
-engine's barrier overhead vs quantum length, (b) DES-predicted step
-time vs pod count for a fixed per-pod workload (weak scaling: the
-hierarchical DCN all-reduce is the scaling cost)."""
+engine's barrier overhead vs quantum length (dense lockstep ``run`` vs
+the work-skipping ``run_until_drained`` the trace executor uses),
+(b) DES-predicted step time vs pod count for a fixed per-pod workload
+(weak scaling: the hierarchical DCN all-reduce is the scaling cost),
+with the engine's own event/stat counters as the derived columns."""
 
 from __future__ import annotations
 
@@ -16,18 +18,23 @@ from repro.core.events import EventQueue, QuantumSync
 def run() -> None:
     # (a) engine: 4 queues, 10k events each, quantum sweep
     for quantum in (100, 1_000, 10_000):
-        def sim():
+        def sim(drained: bool, quantum=quantum):
             queues = [EventQueue(f"pod{i}") for i in range(4)]
             for q in queues:
                 for t in range(0, 100_000, 50):
                     q.schedule(lambda: None, t)
-            QuantumSync(queues, quantum).run(100_000)
+            sync = QuantumSync(queues, quantum)
+            if drained:
+                sync.run_until_drained()
+            else:
+                sync.run(100_000)
+            return sync.barriers
 
-        t = time_us(sim, iters=2)
-        def barriers(quantum=quantum):
-            return 100_000 // quantum
-        emit(f"distgem5/engine_q{quantum}", t,
-             f"barriers={barriers()} events=8000")
+        t_dense = time_us(lambda: sim(False), iters=2)
+        t_drain = time_us(lambda: sim(True), iters=2)
+        emit(f"distgem5/engine_q{quantum}", t_dense,
+             f"barriers={100_000 // quantum} events=8000 "
+             f"drained={t_drain:.0f}us")
 
     # (b) weak scaling: per-pod layer work fixed; DCN AR grows with pods
     layer_colls = [{"kind": "all-reduce", "bytes": 5e8, "participants": 256}]
@@ -39,6 +46,8 @@ def run() -> None:
                   "participants": 256 * pods, "scope": "dcn"}])
         tr = analytic_trace("step", 32, 5e13, 5e10, layer_colls,
                             tail_collectives=tail, overlap=False)
-        res = TraceExecutor(m).execute(tr)
+        res = TraceExecutor(m, record_stats=True).execute(tr)
+        dcn_colls = int(res.stats["sim.dcn.collectives"])
         emit(f"distgem5/step_{pods}pods", res.makespan_s * 1e6,
-             f"exposed_coll_s={res.exposed_collective_s:.3f}")
+             f"exposed_coll_s={res.exposed_collective_s:.3f} "
+             f"events={res.events} dcn_colls={dcn_colls}")

@@ -1,9 +1,11 @@
 """Paper claim §1: 'design-space exploration' — THE canonical gem5 use
 case.  The DES sweeps system parameters (collective algorithm, overlap,
-straggler mitigation, pod count) over a workload trace derived from a
-real dry-run artifact (if present) and reports the best configuration;
-thousands of variants evaluate in milliseconds each, which is the whole
-point of simulation-driven design."""
+straggler mitigation, pod count, link contention on/off) over a
+workload trace derived from a real dry-run artifact (if present) and
+reports the best configuration; thousands of variants evaluate in
+milliseconds each, which is the whole point of simulation-driven
+design.  The contention dimension is new with the event-driven
+executor: it quantifies how much of a makespan is link queueing."""
 
 from __future__ import annotations
 
@@ -46,7 +48,7 @@ def run() -> None:
                 for pods in (1, 2):
                     configs.append((alg, overlap, slow, pods))
 
-    def evaluate(alg, overlap, slow, pods):
+    def evaluate(alg, overlap, slow, pods, contention=True):
         m = ClusterModel("m", num_pods=pods)
         m.instantiate()
         colls = [{"kind": "all-reduce", "bytes": w["coll"] * 256,
@@ -54,11 +56,15 @@ def run() -> None:
         tr = analytic_trace("w", w["layers"], w["flops"], w["bytes"],
                             colls, overlap=overlap)
         sl = (slow * pods)[:pods] if slow else None
-        return TraceExecutor(m, algorithm=alg,
-                             straggler_slowdowns=sl).execute(tr).makespan_s
+        return TraceExecutor(m, algorithm=alg, straggler_slowdowns=sl,
+                             contention=contention
+                             ).execute(tr).makespan_s
 
     t = time_us(lambda: [evaluate(*c) for c in configs], iters=1)
-    results = sorted((evaluate(*c), c) for c in configs)
+    # key on makespan only: tick-exact ties are common and configs
+    # (lists/None) are not comparable
+    results = sorted(((evaluate(*c), c) for c in configs),
+                     key=lambda kv: kv[0])
     best_t, best_c = results[0]
     worst_t, worst_c = results[-1]
     emit("dse/sweep", t / len(configs),
@@ -68,3 +74,8 @@ def run() -> None:
     emit("dse/worst", worst_t * 1e6,
          f"alg={worst_c[0]} overlap={worst_c[1]} "
          f"span={worst_t / best_t:.2f}x")
+    # contention ablation on the best config: how much of the makespan
+    # is link/fabric queueing?
+    free_t = evaluate(*best_c, contention=False)
+    emit("dse/best_no_contention", free_t * 1e6,
+         f"queueing_share={1.0 - free_t / best_t:.3f}")

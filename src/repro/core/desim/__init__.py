@@ -11,4 +11,7 @@ quantum-synchronized multi-pod simulation (§2.17).
 from repro.core.desim.machine import (  # noqa: F401
     ChipModel, PodModel, ClusterModel, TPU_V5E, default_cluster)
 from repro.core.desim.trace import HloTrace, TraceOp  # noqa: F401
-from repro.core.desim.executor import TraceExecutor  # noqa: F401
+from repro.core.desim.simnodes import (  # noqa: F401
+    ChipSim, ClusterSim, DcnSim, WireSim)
+from repro.core.desim.executor import (  # noqa: F401
+    ExecResult, TraceExecutor, predict_step_time)

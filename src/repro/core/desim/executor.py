@@ -7,29 +7,43 @@ algorithms (collectives.py), driven by the deterministic event engine
 (core/events.py), with dist-gem5 quantum synchronization between pods
 (§2.17) and straggler injection (per-chip ``slowdown``).
 
+Every run builds a SimObject tree (simnodes.py) — one :class:`ChipSim`
+and :class:`WireSim` per pod plus one shared :class:`DcnSim`, wired
+through ports — and replays the trace as events on per-pod
+``EventQueue``s (1 tick = 1 ns).  There are no float resource clocks:
+all arbitration happens in integer ticks on the queue.
+
 Timing semantics per chip:
 
 * ``compute`` ops serialize on the chip's compute resource at the
   roofline time ``max(flops/peak, bytes/hbm_bw) * slowdown``.
-* collectives serialize on the wire resource of their scope (ici/dcn);
-  an ``overlap=True`` collective occupies the wire but does NOT block
-  the next compute op unless a later op depends on it — this models
-  async collectives / comm-compute overlap, the distributed-optimization
-  trick the train step is structured around.
-* cross-pod (dcn) collectives only complete at a quantum boundary,
+* intra-pod collectives occupy the concrete torus links of their
+  ``region`` (default: the whole pod) on the pod's wire; collectives
+  whose regions share a link serialize, disjoint regions run in
+  parallel (the Garnet contention model, §2.13).  An ``overlap=True``
+  collective occupies the wire but its time is not counted as exposed —
+  this models async collectives / comm-compute overlap, the
+  distributed-optimization trick the train step is structured around.
+* cross-pod (dcn) collectives rendezvous on the shared fabric and
+  complete at a quantum boundary delivered through ``QuantumSync``,
   reproducing dist-gem5's quantum-based synchronization error model.
+
+Pass ``record_stats=True`` to get the gem5-style statistics tree of the
+run in ``ExecResult.stats`` (flat ``sim.chip0.ops_executed`` keys; the
+full tree object is on ``TraceExecutor.sim_root`` after ``execute``).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.core.desim.collectives import get_algorithm
 from repro.core.desim.machine import ClusterModel
-from repro.core.desim.trace import HloTrace, TraceOp
-
-TICKS_PER_S = 1_000_000_000  # 1 tick = 1 ns
+from repro.core.desim.simnodes import (ChipSim, ClusterSim, DcnSim,
+                                       TICKS_PER_S, WireSim)
+from repro.core.desim.trace import HloTrace
+from repro.core.events import EventQueue, QuantumSync
 
 
 @dataclass
@@ -39,8 +53,9 @@ class ExecResult:
     collective_s: float
     exposed_collective_s: float     # collective time NOT hidden by overlap
     per_chip_busy_s: List[float]
-    events: int
+    events: int                     # == engine events_fired (all queues)
     timeline: List[Dict] = field(default_factory=list)
+    stats: Optional[Dict[str, Any]] = None   # flat gem5-style stats dump
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -62,100 +77,178 @@ class TraceExecutor:
     plus shared wire resources, with stragglers making pods
     heterogeneous.  This keeps the DES cost O(ops x pods), which is what
     lets DSE sweeps run thousands of variants (the gem5 use case).
+
+    ``contention=False`` disables link/uplink serialization (every
+    transfer sees an idle wire) — the contention-free baseline for
+    measuring how much of a makespan is queueing.
     """
 
     def __init__(self, machine: ClusterModel, algorithm: str = "torus2d",
                  record_timeline: bool = False,
-                 straggler_slowdowns: Optional[List[float]] = None):
+                 straggler_slowdowns: Optional[List[float]] = None,
+                 record_stats: bool = False, contention: bool = True):
         self.machine = machine
         self.alg = get_algorithm(algorithm)
         self.dcn_alg = get_algorithm("hierarchical")
         self.record_timeline = record_timeline
+        self.record_stats = record_stats
+        self.contention = contention
         pods = machine.num_pods
         self.slow = (straggler_slowdowns or [1.0] * pods)[:pods]
         while len(self.slow) < pods:
             self.slow.append(1.0)
+        self.sim_root: Optional[ClusterSim] = None
+
+    # ------------------------------------------------------------------
+    def _build(self, queues: List[EventQueue],
+               sync: Optional[QuantumSync]) -> ClusterSim:
+        """Assemble and wire the per-run SimObject tree."""
+        m = self.machine
+        root = ClusterSim("sim", num_pods=m.num_pods,
+                          quantum_ns=m.quantum_ns)
+        dcn = DcnSim("dcn", m, self.dcn_alg, queues, sync,
+                     num_pods=m.num_pods, contention=self.contention)
+        root.dcn = dcn
+        chips: List[ChipSim] = []
+        wires: List[WireSim] = []
+        for p in range(m.num_pods):
+            chip = ChipSim(f"chip{p}", m.pod.chip, queues[p],
+                           pod_id=p, slowdown=self.slow[p])
+            wire = WireSim(f"wire{p}", m, self.alg, queues[p],
+                           pod_id=p, contention=self.contention)
+            chip.coll_port.connect(wire.chip_port)
+            wire.dcn_port.connect(dcn.pod_ports[p])
+            setattr(root, f"chip{p}", chip)
+            setattr(root, f"wire{p}", wire)
+            chips.append(chip)
+            wires.append(wire)
+        root.instantiate()
+        self._chips, self._wires, self._dcn = chips, wires, dcn
+        return root
+
+    def _routes_dcn(self, op) -> bool:
+        chips_per_pod = self.machine.pod.num_chips
+        participants = op.participants or chips_per_pod
+        return op.kind != "compute" and (op.scope == "dcn"
+                                         or participants > chips_per_pod)
 
     # ------------------------------------------------------------------
     def execute(self, trace: HloTrace) -> ExecResult:
         m = self.machine
         pods = m.num_pods
         chips_per_pod = m.pod.num_chips
-        quantum_s = m.quantum_ns / TICKS_PER_S
+        nops = len(trace.ops)
 
-        # per-pod resource clocks (ns are overkill here; float seconds
-        # with deterministic op order gives the same result as the tick
-        # engine for a linear trace — the tick engine is used by the
-        # network-level simulation and QuantumSync tests)
-        compute_free = [0.0] * pods
-        wire_free = [0.0] * pods          # ici wire per pod
-        dcn_free = 0.0                    # shared dcn fabric
-        op_done: List[List[float]] = [[0.0] * len(trace.ops)
-                                      for _ in range(pods)]
+        queues = [EventQueue(f"pod{p}") for p in range(pods)]
+        needs_dcn = any(self._routes_dcn(op) for op in trace.ops)
+        # quantum_ns == 0 means "no quantum error model": dcn ops then
+        # complete at their exact tick instead of a sync boundary
+        sync = (QuantumSync(queues, m.quantum_ns)
+                if needs_dcn and m.quantum_ns > 0 else None)
+        root = self._build(queues, sync)
+        self.sim_root = root
+        chips, wires = self._chips, self._wires
 
-        compute_total = 0.0
-        coll_total = 0.0
-        exposed_total = 0.0
-        timeline: List[Dict] = []
-        events = 0
-
+        # dependency bookkeeping (per pod: SPMD replicas diverge only
+        # through stragglers and the shared dcn fabric)
+        dependents: List[List[int]] = [[] for _ in range(nops)]
         for idx, op in enumerate(trace.ops):
-            for pod in range(pods):
-                dep_ready = max((op_done[pod][d] for d in op.deps),
-                                default=0.0)
+            for d in op.deps:
+                dependents[d].append(idx)
+        remaining = [[len(op.deps) for op in trace.ops]
+                     for _ in range(pods)]
+        op_end: List[List[int]] = [[-1] * nops for _ in range(pods)]
+
+        totals = {"compute": 0.0, "coll": 0.0, "exposed": 0.0}
+        timeline: List[Dict] = []
+
+        def on_done(start: int, end: int, payload: dict) -> None:
+            p, idx = payload["pod"], payload["op_idx"]
+            op = trace.ops[idx]
+            op_end[p][idx] = end
+            if p == 0:
+                dur = payload.get("dur")
+                dur_s = (dur if dur is not None else end - start) \
+                    / TICKS_PER_S
                 if op.kind == "compute":
-                    dur = m.pod.chip.compute_time_s(op.flops, op.bytes)
-                    dur *= self.slow[pod]
-                    start = max(dep_ready, compute_free[pod])
-                    end = start + dur
-                    compute_free[pod] = end
-                    if pod == 0:
-                        compute_total += dur
+                    totals["compute"] += dur_s
                 else:
-                    participants = op.participants or chips_per_pod
-                    if op.scope == "dcn" or participants > chips_per_pod:
-                        dur = self.dcn_alg.time_s(
-                            op.kind, op.coll_bytes, participants, m)
-                        start = max(dep_ready, dcn_free)
-                        end = start + dur
-                        # dist-gem5 quantum rounding on cross-pod traffic
-                        if quantum_s > 0:
-                            q = quantum_s
-                            end = ((end + q - 1e-18) // q) * q
-                        dcn_free = end
-                    else:
-                        dur = self.alg.time_s(
-                            op.kind, op.coll_bytes, participants, m)
-                        start = max(dep_ready, wire_free[pod])
-                        end = start + dur
-                        wire_free[pod] = end
-                    if pod == 0:
-                        coll_total += dur
+                    totals["coll"] += dur_s
+                    if not op.overlap:
                         # exposed = time the compute resource sat idle
                         # waiting for this collective
-                        if not op.overlap:
-                            exposed_total += max(0.0, end - max(
-                                compute_free[pod], dep_ready))
-                op_done[pod][idx] = end
-                events += 1
-                if self.record_timeline and pod == 0:
+                        idle_from = max(chips[p].free_tick,
+                                        payload["ready"])
+                        totals["exposed"] += max(0, end - idle_from) \
+                            / TICKS_PER_S
+                if self.record_timeline:
                     timeline.append({"op": op.name or op.kind,
-                                     "kind": op.kind, "start": start,
-                                     "end": end})
+                                     "kind": op.kind,
+                                     "start": start / TICKS_PER_S,
+                                     "end": end / TICKS_PER_S})
+            for dep_idx in dependents[idx]:
+                remaining[p][dep_idx] -= 1
+                if remaining[p][dep_idx] == 0:
+                    ready = max(op_end[p][d]
+                                for d in trace.ops[dep_idx].deps)
+                    issue(p, dep_idx, ready)
 
-        # cross-pod barrier at step end (gradient sync / pjit semantics):
-        # the step completes when the slowest pod completes.
-        per_pod_end = [max(compute_free[p], wire_free[p]) for p in range(pods)]
-        makespan = max(max(per_pod_end), dcn_free)
+        def issue(p: int, idx: int, ready: int) -> None:
+            op = trace.ops[idx]
+            payload = {"pod": p, "op_idx": idx, "ready": ready,
+                       "name": op.name or op.kind, "done": on_done}
+            if op.kind == "compute":
+                # service time is end - start (wait precedes start)
+                chips[p].exec_compute(ready, op.flops, op.bytes, payload)
+            else:
+                payload.update(kind=op.kind, nbytes=op.coll_bytes,
+                               participants=(op.participants
+                                             or chips_per_pod),
+                               region=op.region,
+                               dcn=self._routes_dcn(op))
+                chips[p].issue_collective(payload)
+
+        # roots of the DAG start at tick 0, in trace order per pod
+        for p in range(pods):
+            for idx, op in enumerate(trace.ops):
+                if not op.deps:
+                    issue(p, idx, 0)
+
+        if sync is not None:
+            sync.run_until_drained()
+        else:
+            # without a quantum sync, queues are independent except for
+            # exact-time dcn deliveries, which may land in a queue that
+            # already drained — iterate until globally quiescent
+            progressed = True
+            while progressed:
+                progressed = False
+                for q in queues:
+                    if not q.empty():
+                        q.run()
+                        progressed = True
+
+        incomplete = [idx for idx in range(nops)
+                      if any(op_end[p][idx] < 0 for p in range(pods))]
+        if incomplete:
+            raise RuntimeError(
+                f"trace deadlock: ops {incomplete[:5]} never completed "
+                "(cyclic or dangling deps)")
+
+        makespan_tick = max((max(ends) for ends in op_end), default=0) \
+            if nops else 0
+        per_pod_end = [max(chips[p].free_tick, wires[p].busy_tick())
+                       / TICKS_PER_S for p in range(pods)]
 
         return ExecResult(
-            makespan_s=makespan,
-            compute_s=compute_total,
-            collective_s=coll_total,
-            exposed_collective_s=min(exposed_total, coll_total),
+            makespan_s=makespan_tick / TICKS_PER_S,
+            compute_s=totals["compute"],
+            collective_s=totals["coll"],
+            exposed_collective_s=min(totals["exposed"], totals["coll"]),
             per_chip_busy_s=per_pod_end,
-            events=events,
+            events=sum(q.events_fired for q in queues),
             timeline=timeline,
+            stats=(root.stats.flat() if self.record_stats else None),
         )
 
 

@@ -187,6 +187,11 @@ class TraceOp:
     overlap   : collective may overlap the *next* compute region
                 (models async collectives / comm-compute overlap)
     scope     : 'ici' (intra-pod) or 'dcn' (inter-pod) for collectives
+    region    : optional (x0, y0, w, h) sub-grid of the torus the
+                collective's ring occupies.  None = the whole pod (every
+                collective contends for the same links, the conservative
+                default).  Disjoint regions can proceed in parallel;
+                overlapping regions serialize on the shared links.
     """
 
     kind: str
@@ -198,6 +203,7 @@ class TraceOp:
     overlap: bool = False
     scope: str = "ici"
     name: str = ""
+    region: Optional[Tuple[int, int, int, int]] = None
 
 
 @dataclass
@@ -267,7 +273,10 @@ class HloTrace:
     @classmethod
     def from_json(cls, s: str) -> "HloTrace":
         d = json.loads(s)
-        ops = [TraceOp(**{**o, "deps": tuple(o["deps"])}) for o in d["ops"]]
+        ops = [TraceOp(**{**o, "deps": tuple(o["deps"]),
+                          "region": (tuple(o["region"])
+                                     if o.get("region") else None)})
+               for o in d["ops"]]
         return cls(name=d["name"], ops=ops, meta=d.get("meta", {}))
 
     # -- stats -------------------------------------------------------------
@@ -300,16 +309,20 @@ def analytic_trace(name: str, layers: int, layer_flops: float,
                              name=f"layer{l}"))
         prev = len(t.ops) - 1
         for c in layer_collectives:
+            region = c.get("region")
             t.ops.append(TraceOp(kind=c["kind"], coll_bytes=c["bytes"],
                                  participants=c.get("participants", 0),
                                  scope=c.get("scope", "ici"),
+                                 region=tuple(region) if region else None,
                                  deps=(prev,), overlap=overlap,
                                  name=f"layer{l}/{c['kind']}"))
             prev = len(t.ops) - 1
     for c in tail_collectives:
+        region = c.get("region")
         t.ops.append(TraceOp(kind=c["kind"], coll_bytes=c["bytes"],
                              participants=c.get("participants", 0),
                              scope=c.get("scope", "dcn"),
+                             region=tuple(region) if region else None,
                              deps=(prev,), overlap=overlap,
                              name=f"tail/{c['kind']}"))
         prev = len(t.ops) - 1

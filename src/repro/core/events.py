@@ -105,12 +105,19 @@ class EventQueue:
         return self._now
 
     def empty(self) -> bool:
-        return not any(not e.cancelled for e in self._heap)
+        # Lazily drop cancelled heads (like next_tick) instead of scanning
+        # the whole heap: the executor's drain loop polls empty() per
+        # queue pass, so an O(n) scan goes quadratic in squashed events.
+        return self.next_tick() is None
 
     def next_tick(self) -> Optional[int]:
         while self._heap and self._heap[0].cancelled:
             heapq.heappop(self._heap)
         return self._heap[0].tick if self._heap else None
+
+    def pending(self) -> int:
+        """Heap entries still stored (cancelled included) — leak probe."""
+        return len(self._heap)
 
     # ------------------------------------------------------------------
     def schedule(self, callback: Callable[[], None], tick: int,
@@ -202,6 +209,16 @@ class QuantumSync:
         deliver = ((deliver + self.quantum - 1) // self.quantum) * self.quantum
         self._pending.append((deliver, dst, callback))
 
+    def _advance_to(self, t: int) -> None:
+        """One barrier step: deliver due messages, run all queues to ``t``."""
+        due = [p for p in self._pending if p[0] <= t]
+        self._pending = [p for p in self._pending if p[0] > t]
+        for deliver, dst, cb in due:
+            dst.schedule(cb, max(deliver, dst.now))
+        for q in self.queues:
+            q.run_until(t)
+        self.barriers += 1
+
     def run(self, max_tick: int) -> int:
         """Run all queues to ``max_tick`` in lockstep quanta.
 
@@ -210,12 +227,36 @@ class QuantumSync:
         t = 0
         while t < max_tick:
             t = min(t + self.quantum, max_tick)
-            # deliver cross-queue messages due at this boundary
-            due = [p for p in self._pending if p[0] <= t]
-            self._pending = [p for p in self._pending if p[0] > t]
-            for deliver, dst, cb in due:
-                dst.schedule(cb, max(deliver, dst.now))
-            for q in self.queues:
-                q.run_until(t)
-            self.barriers += 1
+            self._advance_to(t)
         return self.barriers
+
+    def run_until_drained(self, max_tick: Optional[int] = None) -> int:
+        """Run lockstep quanta until every queue is empty and no cross-
+        queue message is pending.  Returns the final synchronized tick.
+
+        Unlike :meth:`run`, empty quanta are skipped (the boundary jumps
+        straight to the next quantum containing work), so ``barriers``
+        counts only synchronizations that had something to do.  The
+        quantum *semantics* are identical: no queue observes another
+        queue's in-quantum events, and deliveries land exactly on the
+        boundary ``send`` computed for them.
+        """
+        t = (max(q.now for q in self.queues) // self.quantum) * self.quantum
+        while True:
+            upcoming = [nt for nt in (q.next_tick() for q in self.queues)
+                        if nt is not None]
+            if self._pending:
+                upcoming.append(min(p[0] for p in self._pending))
+            if not upcoming:
+                return t
+            target = min(upcoming)
+            # next boundary that covers ``target`` (and is ahead of us)
+            nxt = -(-target // self.quantum) * self.quantum
+            t = max(nxt, t + self.quantum)
+            if max_tick is not None and t > max_tick:
+                # clamp like run(): fire everything due by max_tick,
+                # leave later events unfired
+                if target <= max_tick:
+                    self._advance_to(max_tick)
+                return max_tick
+            self._advance_to(t)

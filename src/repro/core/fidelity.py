@@ -144,13 +144,20 @@ class DryRunBackend(Backend):
 
 
 class DesimBackend(Backend):
-    """Discrete-event timing replay of the compiled step."""
+    """Discrete-event timing replay of the compiled step.
+
+    ``record_stats=True`` additionally dumps the run's gem5-style
+    statistics tree (per-chip/per-wire/fabric counters) into
+    ``report.detail["stats"]`` (flat dict) and
+    ``report.detail["stats_text"]`` (gem5 stats.txt-style dump).
+    """
 
     kind = "desim"
 
-    def __init__(self, machine=None):
+    def __init__(self, machine=None, record_stats: bool = False):
         # machine: repro.core.desim.machine.ClusterModel (built lazily)
         self.machine = machine
+        self.record_stats = record_stats
 
     def run(self, prog: StepProgram,
             dryrun_report: Optional[StepReport] = None) -> StepReport:
@@ -166,7 +173,7 @@ class DesimBackend(Backend):
             dryrun_report.detail["hlo"], name=prog.name,
             total_flops=dryrun_report.flops or 0.0,
             total_bytes=dryrun_report.bytes_accessed or 0.0)
-        ex = TraceExecutor(machine)
+        ex = TraceExecutor(machine, record_stats=self.record_stats)
         result = ex.execute(trace)
         dt = time.perf_counter() - t0
         rep = StepReport(self.kind, prog.name, wall_s=dt,
@@ -177,6 +184,9 @@ class DesimBackend(Backend):
                          memory=dryrun_report.memory)
         rep.detail["desim"] = result
         rep.detail["hlo"] = dryrun_report.detail["hlo"]
+        if self.record_stats and ex.sim_root is not None:
+            rep.detail["stats"] = result.stats
+            rep.detail["stats_text"] = ex.sim_root.stats.dump_text()
         return rep
 
 

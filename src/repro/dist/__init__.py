@@ -1,0 +1,3 @@
+"""Distribution layer: logical-axis sharding rules + mesh sharders."""
+
+from repro.dist.sharding import MeshSharder, Rules, make_rules  # noqa: F401

@@ -1,0 +1,213 @@
+"""Logical-axis sharding rules for the production meshes.
+
+Models declare *logical* axes on every parameter and activation
+("embed", "mlp", "heads", ...; see ``repro.models.common.param``).  This
+module owns the single mapping from logical axes to *mesh* axes, so
+model code never mentions a mesh:
+
+* ``make_rules(cfg, shape, mesh)`` derives a :class:`Rules` table for
+  one (architecture x input shape x mesh) cell, applying the
+  divisibility fallbacks the production configs need (head counts that
+  don't divide the model axis fall back to context parallelism, GQA
+  kv-head counts that don't divide fall back to kv-sequence sharding
+  for decode, batch=1 cells stay unsharded, ...).
+* ``Rules.spec(logical_axes)`` resolves a tuple of logical axis names
+  to a ``PartitionSpec``, dropping duplicate mesh axes (a mesh axis may
+  appear at most once in a spec).
+* :class:`MeshSharder` is the ``repro.models.common.Sharder``
+  implementation used under ``pjit``: it applies
+  ``with_sharding_constraint`` from logical names and builds
+  ``NamedSharding`` trees for parameters and batches.
+
+Only :class:`MeshSharder` touches jax device state; ``Rules`` and
+``make_rules`` read nothing but axis names/sizes, so unit tests can use
+mock meshes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.common import Sharder
+
+PartitionSpec = jax.sharding.PartitionSpec
+
+# logical axis name -> tuple of mesh axis names (None = replicated)
+Mapping = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def _mesh_sizes(mesh: Any) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclass
+class Rules:
+    """Logical-axis -> mesh-axis mapping for one cell."""
+
+    mapping: Mapping = field(default_factory=dict)
+    axis_sizes: Dict[str, int] = field(default_factory=dict)
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...]) -> PartitionSpec:
+        """PartitionSpec for a tuple of logical axis names.
+
+        A mesh axis may shard at most one dimension; later uses of an
+        already-consumed mesh axis are dropped (replicated) so specs
+        built from arbitrary logical tuples are always valid.
+        """
+        used: set = set()
+        entries = []
+        for name in logical_axes:
+            mesh_axes = self.mapping.get(name) if name else None
+            if mesh_axes:
+                mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            if not mesh_axes:
+                entries.append(None)
+                continue
+            used.update(mesh_axes)
+            entries.append(mesh_axes[0] if len(mesh_axes) == 1
+                           else tuple(mesh_axes))
+        return PartitionSpec(*entries)
+
+    def size(self, logical: str) -> int:
+        """Number of shards a logical axis is split into."""
+        mesh_axes = self.mapping.get(logical)
+        if not mesh_axes:
+            return 1
+        return math.prod(self.axis_sizes.get(a, 1) for a in mesh_axes)
+
+    def describe(self) -> Dict[str, Any]:
+        return {k: (list(v) if v else None) for k, v in self.mapping.items()}
+
+
+def make_rules(cfg: ArchConfig, shape: ShapeConfig, mesh: Any) -> Rules:
+    """Derive the sharding rules for one (arch x shape x mesh) cell.
+
+    Fallback ladder (each rung used only when the one above does not
+    divide the mesh axis):
+
+    * attention heads  : TP over "model"  -> context parallel ("q_seq")
+    * GQA kv heads     : TP over "model"  -> kv-cache sequence sharding
+                         ("kv_seq", decode only; capacity is the
+                         sliding window when the arch has one)
+    * batch            : hierarchical DP over ("pod", "data") -> None
+                         when the global batch does not divide the DP
+                         ranks (e.g. long_500k batch=1)
+    """
+    sizes = _mesh_sizes(mesh)
+    model = sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = math.prod(sizes[a] for a in dp_axes) if dp_axes else 1
+
+    def fits(n: int) -> bool:
+        return n > 0 and n % model == 0
+
+    heads_tp = fits(cfg.n_heads)
+    kv_tp = fits(cfg.n_kv_heads)
+
+    # decode kv-cache capacity: sliding-window archs cap the cache
+    cache_len = shape.seq_len
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+
+    mapping: Mapping = {
+        "batch": (dp_axes if dp_axes and shape.global_batch % dp == 0
+                  else None),
+        "seq": None,
+        "embed": None,
+        "mlp": ("model",) if fits(cfg.d_ff) else None,
+        "heads": ("model",) if heads_tp else None,
+        "kv_heads": ("model",) if kv_tp else None,
+        "kv_heads_c": ("model",) if kv_tp else None,
+        "vocab": ("model",) if fits(cfg.vocab_size) else None,
+        # context parallelism replaces head TP when heads don't divide
+        "q_seq": (("model",) if not heads_tp and fits(shape.seq_len)
+                  else None),
+        # kv-cache sequence sharding replaces kv-head TP for decode
+        "kv_seq": (("model",) if shape.kind == "decode" and not kv_tp
+                   and fits(cache_len) else None),
+        "experts": ("model",) if fits(cfg.n_experts) else None,
+    }
+    return Rules(mapping=mapping, axis_sizes=sizes)
+
+
+class MeshSharder(Sharder):
+    """``Sharder`` that applies the rules on a real jax mesh."""
+
+    def __init__(self, mesh: jax.sharding.Mesh, rules: Rules):
+        self.mesh = mesh
+        self.rules = rules
+
+    # -- Sharder interface (called from inside jitted model code) -------
+    def ac(self, x, axes: Tuple[Optional[str], ...]):
+        if getattr(x, "ndim", None) != len(axes):
+            return x
+        spec = self._spec_for_shape(x.shape, axes)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def axis_size(self, logical: str) -> int:
+        return self.rules.size(logical)
+
+    # -- sharding trees for jit in_shardings ----------------------------
+    def sharding(self, axes: Tuple[Optional[str], ...]
+                 ) -> jax.sharding.NamedSharding:
+        return jax.sharding.NamedSharding(self.mesh, self.rules.spec(axes))
+
+    def param_shardings(self, axes_tree: Any) -> Any:
+        """NamedSharding tree from a logical-axes tree (tuple leaves)."""
+        return jax.tree.map(
+            lambda axes: self.sharding(tuple(axes)), axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    def batch_shardings(self, batch_specs: Any,
+                        cfg: Optional[ArchConfig] = None) -> Any:
+        """Data-parallel shardings for a batch ShapeDtypeStruct tree.
+
+        The leading dimension of every array is the (global) batch; it
+        is sharded over the DP axes when divisible, everything else is
+        replicated.  ``cfg`` is accepted for arch-specific overrides
+        (none needed currently).
+        """
+        dp_axes = self.rules.mapping.get("batch")
+        dp = self.rules.size("batch")
+
+        def one(s):
+            ndim = len(s.shape)
+            if (dp_axes and ndim >= 1 and s.shape[0] % dp == 0
+                    and s.shape[0] > 0):
+                entry = dp_axes[0] if len(dp_axes) == 1 else tuple(dp_axes)
+                spec = PartitionSpec(entry, *([None] * (ndim - 1)))
+            else:
+                spec = PartitionSpec()
+            return jax.sharding.NamedSharding(self.mesh, spec)
+
+        return jax.tree.map(one, batch_specs)
+
+    # -- internals -------------------------------------------------------
+    def _spec_for_shape(self, shape: Tuple[int, ...],
+                        axes: Tuple[Optional[str], ...]) -> PartitionSpec:
+        """Like ``rules.spec`` but drops mesh axes whose size does not
+        divide the concrete dimension (uneven activation shapes stay
+        replicated on that dim instead of erroring)."""
+        used: set = set()
+        entries = []
+        for dim, name in zip(shape, axes):
+            mesh_axes = self.rules.mapping.get(name) if name else None
+            if mesh_axes:
+                mesh_axes = tuple(a for a in mesh_axes if a not in used)
+                nshards = math.prod(self.rules.axis_sizes.get(a, 1)
+                                    for a in mesh_axes)
+                if nshards and dim % nshards != 0:
+                    mesh_axes = ()
+            if not mesh_axes:
+                entries.append(None)
+                continue
+            used.update(mesh_axes)
+            entries.append(mesh_axes[0] if len(mesh_axes) == 1
+                           else tuple(mesh_axes))
+        return PartitionSpec(*entries)

@@ -2,6 +2,7 @@
 §2.13, §2.17 analogues)."""
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.desim.collectives import (ALGORITHMS, best_algorithm,

@@ -2,6 +2,7 @@
 §2.17)."""
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.events import EventQueue, QuantumSync, SimExit

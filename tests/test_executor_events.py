@@ -1,0 +1,316 @@
+"""Event-driven TraceExecutor: equivalence with the analytic float-clock
+model on contention-free traces, link/fabric contention, engine event
+accounting, and the gem5-style stats tree.  (No hypothesis dependency:
+this file is the always-on tier-1 coverage of the desim engine.)"""
+
+import pytest
+
+from repro.core.desim.collectives import get_algorithm
+from repro.core.desim.executor import TICKS_PER_S, TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.trace import HloTrace, TraceOp, analytic_trace
+from repro.core.events import EventQueue
+
+
+def cluster(pods=1):
+    c = ClusterModel("c", num_pods=pods)
+    c.instantiate()
+    return c
+
+
+# ---------------------------------------------------------------------------
+# equivalence: event-driven == float-clock on a linear no-contention trace
+# ---------------------------------------------------------------------------
+
+def float_clock_makespan(m, trace, algorithm="torus2d"):
+    """The seed executor's float-second resource-clock model, kept here
+    as the analytic oracle for linear (chain-dependency) traces."""
+    alg = get_algorithm(algorithm)
+    compute_free = wire_free = 0.0
+    op_done = [0.0] * len(trace.ops)
+    for idx, op in enumerate(trace.ops):
+        dep_ready = max((op_done[d] for d in op.deps), default=0.0)
+        if op.kind == "compute":
+            dur = m.pod.chip.compute_time_s(op.flops, op.bytes)
+            start = max(dep_ready, compute_free)
+            compute_free = start + dur
+            op_done[idx] = compute_free
+        else:
+            dur = alg.time_s(op.kind, op.coll_bytes,
+                             op.participants or m.pod.num_chips, m)
+            start = max(dep_ready, wire_free)
+            wire_free = start + dur
+            op_done[idx] = wire_free
+    return max(op_done) if op_done else 0.0
+
+
+def test_equivalence_linear_trace():
+    m = cluster()
+    colls = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+    tr = analytic_trace("lin", 8, 1e12, 1e9, colls, overlap=False)
+    got = TraceExecutor(m).execute(tr).makespan_s
+    want = float_clock_makespan(m, tr)
+    # 1 tick = 1 ns: rounding error is bounded by 0.5 ns per op
+    assert got == pytest.approx(want, abs=len(tr.ops) * 1e-9)
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_equivalence_memory_bound_trace():
+    m = cluster()
+    tr = analytic_trace("mem", 6, 1e9, 1e12, [])
+    got = TraceExecutor(m).execute(tr).makespan_s
+    assert got == pytest.approx(float_clock_makespan(m, tr), rel=1e-6)
+
+
+def test_overlap_flag_is_stat_only_and_hides_exposure():
+    m = cluster()
+    colls = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+    sync = TraceExecutor(m).execute(
+        analytic_trace("s", 8, 1e12, 1e9, colls, overlap=False))
+    ovl = TraceExecutor(m).execute(
+        analytic_trace("o", 8, 1e12, 1e9, colls, overlap=True))
+    assert ovl.makespan_s <= sync.makespan_s
+    assert ovl.summary()["overlap_efficiency"] >= \
+        sync.summary()["overlap_efficiency"]
+    assert sync.exposed_collective_s > 0
+    assert ovl.exposed_collective_s == 0
+
+
+def test_straggler_scales_makespan():
+    m = cluster(pods=2)
+    tr = analytic_trace("t", 4, 1e12, 1e9, [])
+    base = TraceExecutor(m).execute(tr).makespan_s
+    slowed = TraceExecutor(m, straggler_slowdowns=[1.0, 3.0]).execute(tr)
+    assert slowed.makespan_s == pytest.approx(base * 3.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine accounting (acceptance: events == engine events_fired)
+# ---------------------------------------------------------------------------
+
+def test_events_equal_engine_events_fired():
+    m = cluster()
+    colls = [{"kind": "all-gather", "bytes": 1e7, "participants": 16}]
+    tr = analytic_trace("e", 5, 1e11, 1e8, colls)
+    res = TraceExecutor(m).execute(tr)
+    # one completion event per op on the single pod queue
+    assert res.events == len(tr.ops)
+
+    m2 = cluster(pods=3)
+    res2 = TraceExecutor(m2).execute(tr)
+    assert res2.events == 3 * len(tr.ops)
+
+
+def test_dcn_completion_on_quantum_boundary():
+    m = cluster(pods=2)
+    tr = analytic_trace("x", 1, 1e10, 1e8, [],
+                        tail_collectives=[{"kind": "all-reduce",
+                                           "bytes": 1e9,
+                                           "participants": 512,
+                                           "scope": "dcn"}])
+    res = TraceExecutor(m).execute(tr)
+    q = m.quantum_ns / TICKS_PER_S
+    assert (res.makespan_s / q) == pytest.approx(
+        round(res.makespan_s / q), abs=1e-6)
+    # the barrier costs at least one quantum beyond the pure wire time
+    assert res.makespan_s > float_clock_makespan(
+        m, analytic_trace("x", 1, 1e10, 1e8, []))
+
+
+# ---------------------------------------------------------------------------
+# contention (acceptance: shared links serialize, disjoint don't)
+# ---------------------------------------------------------------------------
+
+def _two_collective_trace(region_a, region_b):
+    t = HloTrace("contend")
+    t.ops.append(TraceOp(kind="compute", flops=1e12, bytes=1e9, name="c0"))
+    for i, region in enumerate((region_a, region_b)):
+        t.ops.append(TraceOp(kind="all-gather", coll_bytes=1e8,
+                             participants=4, deps=(0,), region=region,
+                             name=f"ag{i}"))
+    return t
+
+
+def test_torus_shared_link_serializes():
+    m = cluster()
+    shared = TraceExecutor(m).execute(
+        _two_collective_trace((0, 0, 4, 1), (0, 0, 4, 1)))
+    disjoint = TraceExecutor(m).execute(
+        _two_collective_trace((0, 0, 4, 1), (0, 2, 4, 1)))
+    # same ring -> serialized; disjoint rows -> fully parallel
+    assert shared.makespan_s > disjoint.makespan_s
+    coll = get_algorithm("torus2d").time_s("all-gather", 1e8, 4, m)
+    comp = m.pod.chip.compute_time_s(1e12, 1e9)
+    assert shared.makespan_s == pytest.approx(comp + 2 * coll, rel=1e-6)
+    assert disjoint.makespan_s == pytest.approx(comp + coll, rel=1e-6)
+
+
+def test_default_region_is_whole_pod_conservative():
+    """Collectives without placement all contend (seed-equivalent)."""
+    m = cluster()
+    res = TraceExecutor(m).execute(_two_collective_trace(None, None))
+    coll = get_algorithm("torus2d").time_s("all-gather", 1e8, 4, m)
+    comp = m.pod.chip.compute_time_s(1e12, 1e9)
+    assert res.makespan_s == pytest.approx(comp + 2 * coll, rel=1e-6)
+
+
+def _dcn_pair_trace():
+    t = HloTrace("dcn2")
+    t.ops.append(TraceOp(kind="compute", flops=1e12, bytes=1e9))
+    for i in range(2):
+        t.ops.append(TraceOp(kind="all-reduce", coll_bytes=1e9,
+                             participants=512, scope="dcn", deps=(0,),
+                             name=f"ar{i}"))
+    return t
+
+
+def test_shared_dcn_link_contention_lengthens_makespan():
+    """Acceptance scenario: two pods, two concurrent cross-pod
+    collectives on the shared DCN fabric — the contention-aware run is
+    strictly longer than the contention-free run."""
+    m = cluster(pods=2)
+    contended = TraceExecutor(m).execute(_dcn_pair_trace())
+    free = TraceExecutor(m, contention=False).execute(_dcn_pair_trace())
+    assert contended.makespan_s > free.makespan_s
+
+
+# ---------------------------------------------------------------------------
+# stats tree (record_stats=True)
+# ---------------------------------------------------------------------------
+
+def test_record_stats_dumps_simobject_tree():
+    m = cluster(pods=2)
+    colls = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+    tr = analytic_trace("s", 4, 1e12, 1e9, colls)
+    ex = TraceExecutor(m, record_stats=True)
+    res = ex.execute(tr)
+    assert res.stats is not None
+    for p in range(2):
+        assert res.stats[f"sim.chip{p}.ops_executed"] == 4
+        assert res.stats[f"sim.wire{p}.collectives"] == 4
+        assert res.stats[f"sim.wire{p}.bytes_on_wire"] == pytest.approx(4e8)
+    assert res.stats["sim.dcn.collectives"] == 0
+    # gem5-style text dump renders the same tree
+    text = ex.sim_root.stats.dump_text()
+    assert "sim.chip0.ops_executed" in text
+    # default: no stats overhead
+    assert TraceExecutor(m).execute(tr).stats is None
+
+
+def test_stats_busy_matches_result_totals():
+    m = cluster()
+    tr = analytic_trace("b", 3, 1e12, 1e9,
+                        [{"kind": "all-gather", "bytes": 1e8,
+                          "participants": 256}])
+    res = TraceExecutor(m, record_stats=True).execute(tr)
+    assert res.stats["sim.chip0.busy_seconds"] == \
+        pytest.approx(res.compute_s, rel=1e-9)
+    assert res.stats["sim.wire0.busy_seconds"] == \
+        pytest.approx(res.collective_s, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# engine regression: squashed events must not leak heap entries
+# ---------------------------------------------------------------------------
+
+def test_squashed_events_do_not_leak():
+    q = EventQueue()
+    events = [q.schedule(lambda: None, t) for t in range(1000)]
+    for ev in events:
+        ev.squash()
+    assert q.empty()           # lazily reclaims cancelled heads...
+    assert q.pending() == 0    # ...so nothing is left in the heap
+    # and still correct when live events are interleaved
+    fired = []
+    keep = q.schedule(lambda: fired.append(1), 2000)
+    dead = q.schedule(lambda: fired.append(2), 1500)
+    dead.squash()
+    assert not q.empty() and keep.scheduled()
+    q.run()
+    assert fired == [1] and q.pending() == 0
+
+
+def test_quantum_zero_disables_rounding():
+    """quantum_ns=0 (seed behavior: no quantum error model) must not
+    crash and completes dcn ops at their exact tick."""
+    m = ClusterModel("c", num_pods=2, quantum_ns=0)
+    m.instantiate()
+    tr = analytic_trace("x", 1, 1e10, 1e8, [],
+                        tail_collectives=[{"kind": "all-reduce",
+                                           "bytes": 1e9,
+                                           "participants": 512,
+                                           "scope": "dcn"}])
+    res = TraceExecutor(m).execute(tr)
+    mq = cluster(pods=2)
+    rounded = TraceExecutor(mq).execute(tr)
+    # exact completion is never later than the quantum-rounded one
+    assert 0 < res.makespan_s <= rounded.makespan_s
+
+
+def test_permute_does_not_pollute_footprint_cache():
+    """collective-permute appends its route links to a COPY of the
+    cached region footprint; repeated permutes must not grow it."""
+    m = cluster()
+    t = HloTrace("perm")
+    t.ops.append(TraceOp(kind="compute", flops=1e9, bytes=1e6))
+    prev = 0
+    for i in range(3):
+        t.ops.append(TraceOp(kind="collective-permute", coll_bytes=1e6,
+                             participants=4, deps=(prev,),
+                             region=(0, 0, 2, 2), name=f"cp{i}"))
+        prev = len(t.ops) - 1
+    ex = TraceExecutor(m)
+    ex.execute(t)
+    wire = ex._wires[0]
+    assert len(wire._footprints[(0, 0, 2, 2)]) == 2 * 2 * 4
+
+
+def test_quantum_zero_delivery_to_drained_queue():
+    """quantum_ns=0 with a pod whose queue drains far past the dcn
+    completion tick: delivery must clamp to now, not crash."""
+    m = ClusterModel("c", num_pods=2, quantum_ns=0)
+    m.instantiate()
+    t = HloTrace("late")
+    t.ops.append(TraceOp(kind="compute", flops=1e10, bytes=1e7))
+    t.ops.append(TraceOp(kind="all-reduce", coll_bytes=1e6,
+                         participants=512, scope="dcn", deps=(0,)))
+    # long compute independent of the dcn op: pod0 drains way past it
+    t.ops.append(TraceOp(kind="compute", flops=1e13, bytes=1e9,
+                         deps=(0,)))
+    res = TraceExecutor(m).execute(t)
+    assert res.makespan_s > 0
+
+
+def test_busy_high_water_mark_with_contention_off():
+    """per_chip_busy_s must not rewind when a short transfer completes
+    after a long one under contention=False."""
+    m = cluster()
+    t = HloTrace("hw")
+    t.ops.append(TraceOp(kind="compute", flops=1e10, bytes=1e7))
+    t.ops.append(TraceOp(kind="all-reduce", coll_bytes=1e9,
+                         participants=256, deps=(0,)))   # long
+    t.ops.append(TraceOp(kind="all-gather", coll_bytes=1e3,
+                         participants=4, deps=(0,)))     # tiny
+    res = TraceExecutor(m, contention=False).execute(t)
+    assert res.per_chip_busy_s[0] == pytest.approx(res.makespan_s,
+                                                   rel=1e-9)
+
+
+def test_run_until_drained_clamps_to_max_tick():
+    from repro.core.events import QuantumSync
+    q = EventQueue()
+    fired = []
+    q.schedule(lambda: fired.append(q.now), 950)
+    sync = QuantumSync([q], quantum=100)
+    end = sync.run_until_drained(max_tick=980)
+    # same clamped semantics as run(): tick-950 event fires by 980
+    assert fired == [950] and end == 980
+
+
+def test_trace_deadlock_detection():
+    m = cluster()
+    t = HloTrace("cycle")
+    t.ops.append(TraceOp(kind="compute", flops=1e9, bytes=1e6, deps=(1,)))
+    t.ops.append(TraceOp(kind="compute", flops=1e9, bytes=1e6, deps=(0,)))
+    with pytest.raises(RuntimeError, match="deadlock"):
+        TraceExecutor(m).execute(t)

@@ -10,6 +10,10 @@ from repro.configs import REGISTRY, all_archs, get_config, smoke
 from repro.configs.base import ShapeConfig
 from repro.models import build_model
 
+# every test here jit-compiles a full (reduced) model — minutes of XLA
+# time; tools/ci.sh skips them for the fast tier-1 loop
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

@@ -14,6 +14,10 @@ from repro.configs.base import ShapeConfig
 from repro.data import SyntheticPipeline
 from repro.models import build_model
 from repro.serve import BatchServer, Request
+
+# end-to-end trainer/server loops jit-compile real (reduced) models;
+# tools/ci.sh skips them for the fast tier-1 loop
+pytestmark = pytest.mark.slow
 from repro.train import TrainOptions, build_train_step, init_train_state
 from repro.train.trainer import SimulatedFailure, Trainer
 
