@@ -1,9 +1,9 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV/JSON emission."""
 
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
 
@@ -11,6 +11,13 @@ ROWS: List[Tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def rows_as_dict() -> Dict[str, Dict[str, object]]:
+    """Machine-readable view of everything emitted so far (for
+    ``benchmarks.run --json``)."""
+    return {name: {"us_per_call": us, "derived": derived}
+            for name, us, derived in ROWS}
 
 
 def time_us(fn: Callable, iters: int = 5, warmup: int = 1) -> float:

@@ -9,10 +9,9 @@ with the engine's own event/stat counters as the derived columns."""
 from __future__ import annotations
 
 from benchmarks.common import emit, time_us
-from repro.core.desim.executor import TraceExecutor
-from repro.core.desim.machine import ClusterModel
 from repro.core.desim.trace import analytic_trace
 from repro.core.events import EventQueue, QuantumSync
+from repro.sim import v5e_multipod, v5e_pod
 
 
 def run() -> None:
@@ -39,14 +38,13 @@ def run() -> None:
     # (b) weak scaling: per-pod layer work fixed; DCN AR grows with pods
     layer_colls = [{"kind": "all-reduce", "bytes": 5e8, "participants": 256}]
     for pods in (1, 2, 4, 8):
-        m = ClusterModel("c", num_pods=pods)
-        m.instantiate()
+        board = v5e_pod() if pods == 1 else v5e_multipod(pods)
         tail = ([] if pods == 1 else
                 [{"kind": "all-reduce", "bytes": 2e9,
                   "participants": 256 * pods, "scope": "dcn"}])
         tr = analytic_trace("step", 32, 5e13, 5e10, layer_colls,
                             tail_collectives=tail, overlap=False)
-        res = TraceExecutor(m, record_stats=True).execute(tr)
+        res = board.executor(record_stats=True).execute(tr)
         dcn_colls = int(res.stats["sim.dcn.collectives"])
         emit(f"distgem5/step_{pods}pods", res.makespan_s * 1e6,
              f"exposed_coll_s={res.exposed_collective_s:.3f} "

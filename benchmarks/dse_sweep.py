@@ -15,9 +15,8 @@ import os
 
 from benchmarks.common import emit, time_us
 from repro.core.desim.collectives import ALGORITHMS
-from repro.core.desim.executor import TraceExecutor
-from repro.core.desim.machine import ClusterModel
 from repro.core.desim.trace import analytic_trace
+from repro.sim import v5e_multipod, v5e_pod
 
 
 def _workload():
@@ -49,16 +48,16 @@ def run() -> None:
                     configs.append((alg, overlap, slow, pods))
 
     def evaluate(alg, overlap, slow, pods, contention=True):
-        m = ClusterModel("m", num_pods=pods)
-        m.instantiate()
+        board = (v5e_pod(algorithm=alg) if pods == 1
+                 else v5e_multipod(pods, algorithm=alg))
         colls = [{"kind": "all-reduce", "bytes": w["coll"] * 256,
                   "participants": 256}]
         tr = analytic_trace("w", w["layers"], w["flops"], w["bytes"],
                             colls, overlap=overlap)
         sl = (slow * pods)[:pods] if slow else None
-        return TraceExecutor(m, algorithm=alg, straggler_slowdowns=sl,
-                             contention=contention
-                             ).execute(tr).makespan_s
+        return board.executor(straggler_slowdowns=sl,
+                              contention=contention
+                              ).execute(tr).makespan_s
 
     t = time_us(lambda: [evaluate(*c) for c in configs], iters=1)
     # key on makespan only: tick-exact ties are common and configs

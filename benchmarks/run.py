@@ -3,18 +3,27 @@
 Prints ``name,us_per_call,derived`` CSV rows (see each module's
 docstring for the claim it reproduces).
 
-  python -m benchmarks.run            # all
-  python -m benchmarks.run fidelity   # substring filter
+  python -m benchmarks.run                  # all
+  python -m benchmarks.run fidelity         # substring filter
+  python -m benchmarks.run --json           # also write BENCH_desim.json
+  python -m benchmarks.run --json fidelity  # filtered + JSON
+
+``--json`` writes ``BENCH_desim.json`` (per-benchmark ``us_per_call``
+plus the derived-metric string) so the perf trajectory across PRs is
+machine-readable.
 """
 
 from __future__ import annotations
 
+import json
 import sys
+import time
 import traceback
 
 from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
                         distgem5_scaling, elastic_trace, fidelity_spectrum,
-                        kernel_throughput, roofline)
+                        kernel_throughput, roofline, sampled_sim)
+from benchmarks.common import rows_as_dict
 
 BENCHES = [
     ("fidelity_spectrum", fidelity_spectrum.run),
@@ -22,14 +31,21 @@ BENCHES = [
     ("collective_protocols", collective_protocols.run),
     ("distgem5_scaling", distgem5_scaling.run),
     ("checkpoint_fork", checkpoint_fork.run),
+    ("sampled_sim", sampled_sim.run),
     ("kernel_throughput", kernel_throughput.run),
     ("dse_sweep", dse_sweep.run),
     ("roofline", roofline.run),
 ]
 
+JSON_PATH = "BENCH_desim.json"
+
 
 def main() -> None:
-    pat = sys.argv[1] if len(sys.argv) > 1 else ""
+    args = [a for a in sys.argv[1:]]
+    json_mode = "--json" in args
+    if json_mode:
+        args.remove("--json")
+    pat = args[0] if args else ""
     print("name,us_per_call,derived")
     failed = []
     for name, fn in BENCHES:
@@ -40,6 +56,17 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if json_mode:
+        doc = {
+            "generated_unix": time.time(),
+            "filter": pat,
+            "failed": failed,
+            "benchmarks": rows_as_dict(),
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {JSON_PATH} ({len(doc['benchmarks'])} rows)",
+              file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -16,9 +16,8 @@ import glob
 import json
 
 from repro.core.desim.collectives import ALGORITHMS
-from repro.core.desim.executor import TraceExecutor
-from repro.core.desim.machine import ClusterModel
 from repro.core.desim.trace import analytic_trace
+from repro.sim import v5e_pod
 
 art = glob.glob("results/dryrun/stablelm-1.6b__train_4k__single.json")
 if art:
@@ -38,15 +37,16 @@ for hbm_mult in (0.5, 1.0, 2.0):
     for ici_mult in (0.5, 1.0, 2.0):
         for alg in ALGORITHMS:
             for overlap in (False, True):
-                m = ClusterModel("m")
-                m.pod.chip._params["hbm_bw"] = 819e9 * hbm_mult
-                m.pod.ici._params["bw"] = 50e9 * ici_mult
-                m.instantiate()
+                # prebuilt board with per-component overrides: no
+                # hand-wired ClusterModel (repro.sim.boards)
+                board = v5e_pod(chip={"hbm_bw": 819e9 * hbm_mult},
+                                ici={"bw": 50e9 * ici_mult},
+                                algorithm=alg)
                 tr = analytic_trace(
                     "w", L, flops, nbytes,
                     [{"kind": "all-reduce", "bytes": coll,
                       "participants": 256}], overlap=overlap)
-                t = TraceExecutor(m, algorithm=alg).execute(tr).makespan_s
+                t = board.executor().execute(tr).makespan_s
                 rows.append((t, hbm_mult, ici_mult, alg, overlap))
 
 rows.sort()

@@ -6,6 +6,9 @@
 4. dry-run lower+compile           (gem5: atomic fidelity)
 5. replay the compiled step on a
    parameterized TPU machine model (gem5: detailed/O3 fidelity)
+6. script the simulation with the
+   Simulator exit-event loop       (gem5 stdlib: boards + exit events,
+                                    checkpoint / restore / re-sweep)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,9 +18,12 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, smoke
 from repro.configs.base import ShapeConfig
+from repro.core.desim.trace import analytic_trace
 from repro.core.fidelity import DesimBackend, DryRunBackend, StepProgram
 from repro.data import SyntheticPipeline
 from repro.models import build_model
+from repro.sim import (ExitEventType, Simulator, SteadyStateWorkload,
+                       v5e_pod)
 from repro.train import TrainOptions, build_train_step, init_train_state
 
 # -- 1. config --------------------------------------------------------------
@@ -51,6 +57,33 @@ rep = DryRunBackend().run(prog)
 print(f"dryrun: flops/step={rep.flops:.2e} hbm_bytes={rep.bytes_accessed:.2e}")
 
 # -- 5. desim fidelity: predicted step time on a TPU machine model ------------
-rep2 = DesimBackend().run(prog, dryrun_report=rep)
+rep2 = DesimBackend(board=v5e_pod()).run(prog, dryrun_report=rep)
 print(f"desim: predicted TPU-pod step time = {rep2.predicted_step_s:.3e} s")
+
+# -- 6. the Simulator front-end: exit events + checkpoint/restore -------------
+# a 16-step steady-state training workload with the dry-run's per-step
+# costs spread over the layers (per-layer all-reduce: data-parallel grad
+# sync when this step is sharded over the pod)
+L = cfg.n_layers
+step_trace = analytic_trace(
+    "quick_step", L, (rep.flops or 0.0) / L, (rep.bytes_accessed or 0.0) / L,
+    [{"kind": "all-reduce", "bytes": 2 * (rep.bytes_accessed or 0.0) / L,
+      "participants": 256}])
+sim = Simulator(v5e_pod(), SteadyStateWorkload(step_trace, 16))
+per_step = v5e_pod().executor().execute(step_trace).makespan_s
+mid = int(per_step * 1e9 * 4)                  # ticks are ns: 4 steps in
+sim.schedule_max_tick(mid)                     # pause after ~4 steps...
+sim.schedule_checkpoint(mid)                   # ...checkpoint there
+for ev in sim.run():
+    print(f"  exit event: {ev}")
+    if ev.kind is ExitEventType.CHECKPOINT:
+        ckpt = ev.payload["checkpoint"]
+# restore the checkpoint onto a machine with doubled HBM bandwidth: the
+# remaining 12 steps re-time under the new hardware (checkpoint once,
+# sweep hardware — the gem5 DSE workflow)
+fast = Simulator.from_checkpoint(ckpt, board=v5e_pod(
+    chip={"hbm_bw": 2 * 819e9}))
+res_fast = fast.run_to_completion()
+print(f"simulator: 16-step nominal={sim.result().makespan_s:.3e}s "
+      f"2xHBM-from-checkpoint={res_fast.makespan_s:.3e}s")
 print("quickstart OK")

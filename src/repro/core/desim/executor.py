@@ -28,6 +28,14 @@ Timing semantics per chip:
   complete at a quantum boundary delivered through ``QuantumSync``,
   reproducing dist-gem5's quantum-based synchronization error model.
 
+Execution is **resumable** (gem5 §2.7 checkpoint/restore): ``execute``
+is sugar for ``begin`` / ``advance`` / ``result``, and a paused run can
+be gem5-style **drained** (in-flight events complete, newly-ready ops
+are deferred instead of issued), snapshotted to a plain dict, and
+**restored** — on the same machine or a re-parameterized one — with
+``TraceExecutor.restore``.  The ``repro.sim`` front-end builds the
+checkpoint file format and the exit-event loop on top of these hooks.
+
 Pass ``record_stats=True`` to get the gem5-style statistics tree of the
 run in ``ExecResult.stats`` (flat ``sim.chip0.ops_executed`` keys; the
 full tree object is on ``TraceExecutor.sim_root`` after ``execute``).
@@ -36,13 +44,13 @@ full tree object is on ``TraceExecutor.sim_root`` after ``execute``).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.desim.collectives import get_algorithm
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import (ChipSim, ClusterSim, DcnSim,
                                        TICKS_PER_S, WireSim)
-from repro.core.desim.trace import HloTrace
+from repro.core.desim.trace import HloTrace, TraceOp
 from repro.core.events import EventQueue, QuantumSync
 
 
@@ -69,6 +77,10 @@ class ExecResult:
         }
 
 
+# hook invoked on pod-0 op completion: (op, op_idx, start, end) -> None
+OpHook = Callable[[TraceOp, int, int, int], None]
+
+
 class TraceExecutor:
     """Replays an HloTrace on a ClusterModel.
 
@@ -81,6 +93,18 @@ class TraceExecutor:
     ``contention=False`` disables link/uplink serialization (every
     transfer sees an idle wire) — the contention-free baseline for
     measuring how much of a makespan is queueing.
+
+    Lifecycle::
+
+        ex.execute(trace)                    # one-shot (begin+advance+result)
+
+        ex.begin(trace)                      # resumable
+        while not ex.advance(max_tick=t):    # pause at tick boundaries
+            t += ...
+        res = ex.result()
+
+        ex.drain(); state = ex.snapshot()    # gem5 drain-then-serialize
+        ex2 = TraceExecutor(machine2, **cfg).restore(trace, state)
     """
 
     def __init__(self, machine: ClusterModel, algorithm: str = "torus2d",
@@ -88,6 +112,7 @@ class TraceExecutor:
                  straggler_slowdowns: Optional[List[float]] = None,
                  record_stats: bool = False, contention: bool = True):
         self.machine = machine
+        self.algorithm = algorithm
         self.alg = get_algorithm(algorithm)
         self.dcn_alg = get_algorithm("hierarchical")
         self.record_timeline = record_timeline
@@ -98,6 +123,8 @@ class TraceExecutor:
         while len(self.slow) < pods:
             self.slow.append(1.0)
         self.sim_root: Optional[ClusterSim] = None
+        self.op_hook: Optional[OpHook] = None
+        self._trace: Optional[HloTrace] = None
 
     # ------------------------------------------------------------------
     def _build(self, queues: List[EventQueue],
@@ -132,124 +159,323 @@ class TraceExecutor:
         return op.kind != "compute" and (op.scope == "dcn"
                                          or participants > chips_per_pod)
 
-    # ------------------------------------------------------------------
-    def execute(self, trace: HloTrace) -> ExecResult:
+    # -- lifecycle: begin ------------------------------------------------
+    def _setup(self, trace: HloTrace) -> None:
+        """Common state for begin() and restore()."""
         m = self.machine
         pods = m.num_pods
-        chips_per_pod = m.pod.num_chips
         nops = len(trace.ops)
-
-        queues = [EventQueue(f"pod{p}") for p in range(pods)]
+        self._trace = trace
+        self._queues = [EventQueue(f"pod{p}") for p in range(pods)]
         needs_dcn = any(self._routes_dcn(op) for op in trace.ops)
         # quantum_ns == 0 means "no quantum error model": dcn ops then
         # complete at their exact tick instead of a sync boundary
-        sync = (QuantumSync(queues, m.quantum_ns)
-                if needs_dcn and m.quantum_ns > 0 else None)
-        root = self._build(queues, sync)
-        self.sim_root = root
-        chips, wires = self._chips, self._wires
-
+        self._sync = (QuantumSync(self._queues, m.quantum_ns)
+                      if needs_dcn and m.quantum_ns > 0 else None)
+        self.sim_root = self._build(self._queues, self._sync)
         # dependency bookkeeping (per pod: SPMD replicas diverge only
         # through stragglers and the shared dcn fabric)
-        dependents: List[List[int]] = [[] for _ in range(nops)]
+        self._dependents: List[List[int]] = [[] for _ in range(nops)]
         for idx, op in enumerate(trace.ops):
             for d in op.deps:
-                dependents[d].append(idx)
-        remaining = [[len(op.deps) for op in trace.ops]
-                     for _ in range(pods)]
-        op_end: List[List[int]] = [[-1] * nops for _ in range(pods)]
+                self._dependents[d].append(idx)
+        self._remaining = [[len(op.deps) for op in trace.ops]
+                           for _ in range(pods)]
+        self._op_end: List[List[int]] = [[-1] * nops for _ in range(pods)]
+        self._ncomplete = 0
+        self._totals = {"compute": 0.0, "coll": 0.0, "exposed": 0.0}
+        self._timeline: List[Dict] = []
+        self._draining = False
+        self._deferred: List[Tuple[int, int, int]] = []
 
-        totals = {"compute": 0.0, "coll": 0.0, "exposed": 0.0}
-        timeline: List[Dict] = []
-
-        def on_done(start: int, end: int, payload: dict) -> None:
-            p, idx = payload["pod"], payload["op_idx"]
-            op = trace.ops[idx]
-            op_end[p][idx] = end
-            if p == 0:
-                dur = payload.get("dur")
-                dur_s = (dur if dur is not None else end - start) \
-                    / TICKS_PER_S
-                if op.kind == "compute":
-                    totals["compute"] += dur_s
-                else:
-                    totals["coll"] += dur_s
-                    if not op.overlap:
-                        # exposed = time the compute resource sat idle
-                        # waiting for this collective
-                        idle_from = max(chips[p].free_tick,
-                                        payload["ready"])
-                        totals["exposed"] += max(0, end - idle_from) \
-                            / TICKS_PER_S
-                if self.record_timeline:
-                    timeline.append({"op": op.name or op.kind,
-                                     "kind": op.kind,
-                                     "start": start / TICKS_PER_S,
-                                     "end": end / TICKS_PER_S})
-            for dep_idx in dependents[idx]:
-                remaining[p][dep_idx] -= 1
-                if remaining[p][dep_idx] == 0:
-                    ready = max(op_end[p][d]
-                                for d in trace.ops[dep_idx].deps)
-                    issue(p, dep_idx, ready)
-
-        def issue(p: int, idx: int, ready: int) -> None:
-            op = trace.ops[idx]
-            payload = {"pod": p, "op_idx": idx, "ready": ready,
-                       "name": op.name or op.kind, "done": on_done}
-            if op.kind == "compute":
-                # service time is end - start (wait precedes start)
-                chips[p].exec_compute(ready, op.flops, op.bytes, payload)
-            else:
-                payload.update(kind=op.kind, nbytes=op.coll_bytes,
-                               participants=(op.participants
-                                             or chips_per_pod),
-                               region=op.region,
-                               dcn=self._routes_dcn(op))
-                chips[p].issue_collective(payload)
-
+    def begin(self, trace: HloTrace) -> "TraceExecutor":
+        """Build the SimObject tree and issue the trace's root ops.
+        Call ``advance`` to make progress, ``result`` when done."""
+        self._setup(trace)
         # roots of the DAG start at tick 0, in trace order per pod
-        for p in range(pods):
+        for p in range(self.machine.num_pods):
             for idx, op in enumerate(trace.ops):
                 if not op.deps:
-                    issue(p, idx, 0)
+                    self._issue(p, idx, 0)
+        return self
 
-        if sync is not None:
-            sync.run_until_drained()
+    # -- issue / completion ---------------------------------------------
+    def _payload(self, p: int, idx: int, ready: int) -> dict:
+        op = self._trace.ops[idx]
+        payload = {"pod": p, "op_idx": idx, "ready": ready,
+                   "name": op.name or op.kind, "done": self._on_done}
+        if op.kind != "compute":
+            payload.update(kind=op.kind, nbytes=op.coll_bytes,
+                           participants=(op.participants
+                                         or self.machine.pod.num_chips),
+                           region=op.region,
+                           dcn=self._routes_dcn(op))
+        return payload
+
+    def _issue(self, p: int, idx: int, ready: int) -> None:
+        if self._draining:
+            # gem5 drain(): newly-ready work is deferred, in-flight
+            # events complete.  The deferred frontier is what snapshot()
+            # serializes and restore() re-schedules.
+            self._deferred.append((p, idx, int(ready)))
+            return
+        op = self._trace.ops[idx]
+        payload = self._payload(p, idx, ready)
+        if op.kind == "compute":
+            # service time is end - start (wait precedes start)
+            self._chips[p].exec_compute(ready, op.flops, op.bytes, payload)
         else:
-            # without a quantum sync, queues are independent except for
-            # exact-time dcn deliveries, which may land in a queue that
-            # already drained — iterate until globally quiescent
-            progressed = True
-            while progressed:
-                progressed = False
-                for q in queues:
-                    if not q.empty():
-                        q.run()
-                        progressed = True
+            self._chips[p].issue_collective(payload)
 
-        incomplete = [idx for idx in range(nops)
-                      if any(op_end[p][idx] < 0 for p in range(pods))]
-        if incomplete:
+    def _on_done(self, start: int, end: int, payload: dict) -> None:
+        p, idx = payload["pod"], payload["op_idx"]
+        op = self._trace.ops[idx]
+        if self._op_end[p][idx] < 0:
+            self._ncomplete += 1
+        self._op_end[p][idx] = end
+        if p == 0:
+            dur = payload.get("dur")
+            dur_s = (dur if dur is not None else end - start) \
+                / TICKS_PER_S
+            if op.kind == "compute":
+                self._totals["compute"] += dur_s
+            else:
+                self._totals["coll"] += dur_s
+                if not op.overlap:
+                    # exposed = time the compute resource sat idle
+                    # waiting for this collective
+                    idle_from = max(self._chips[p].free_tick,
+                                    payload["ready"])
+                    self._totals["exposed"] += max(0, end - idle_from) \
+                        / TICKS_PER_S
+            if self.record_timeline:
+                self._timeline.append({"op": op.name or op.kind,
+                                       "kind": op.kind,
+                                       "start": start / TICKS_PER_S,
+                                       "end": end / TICKS_PER_S})
+            if self.op_hook is not None:
+                self.op_hook(op, idx, start, end)
+        for dep_idx in self._dependents[idx]:
+            self._remaining[p][dep_idx] -= 1
+            if self._remaining[p][dep_idx] == 0:
+                ready = max(self._op_end[p][d]
+                            for d in self._trace.ops[dep_idx].deps)
+                self._issue(p, dep_idx, ready)
+
+    # -- lifecycle: advance ----------------------------------------------
+    @property
+    def now(self) -> int:
+        """Latest tick any pod queue has reached."""
+        if self._trace is None:
+            return 0
+        return max(q.now for q in self._queues)
+
+    def done(self) -> bool:
+        return (self._trace is not None and self._ncomplete ==
+                len(self._trace.ops) * self.machine.num_pods)
+
+    def advance(self, max_tick: Optional[int] = None,
+                stop_check: Optional[Callable[[], bool]] = None) -> bool:
+        """Fire events until the run completes, no event at tick
+        <= ``max_tick`` remains, or ``stop_check()`` returns True
+        (checked at quantum boundaries under QuantumSync, per event
+        otherwise).  Returns ``done()``; call again to resume."""
+        if self._trace is None:
+            raise RuntimeError("advance() before begin()/restore()")
+        if self._sync is not None:
+            self._sync.run_until_drained(max_tick=max_tick,
+                                         stop_check=stop_check)
+        else:
+            self._advance_nosync(max_tick, stop_check)
+        return self.done()
+
+    def _advance_nosync(self, max_tick: Optional[int],
+                        stop_check: Optional[Callable[[], bool]]) -> None:
+        """Globally tick-ordered merge over the pod queues (without a
+        quantum model the queues are one logical timeline; cross-pod
+        dcn deliveries land at their exact tick).  Ties break on pod
+        index — deterministic."""
+        queues = self._queues
+        while True:
+            if stop_check is not None and stop_check():
+                return
+            best_q = None
+            best_nt = None
+            for q in queues:
+                nt = q.next_tick()
+                if nt is None:
+                    continue
+                if best_nt is None or nt < best_nt:
+                    best_nt, best_q = nt, q
+            if best_q is None:
+                return
+            if max_tick is not None and best_nt > max_tick:
+                return
+            best_q.step()
+
+    # -- lifecycle: drain / snapshot / restore ----------------------------
+    def drain(self) -> bool:
+        """gem5-style drain: suppress new issues, run until no in-flight
+        event or cross-queue message remains.  After drain() the run is
+        quiescent — ``snapshot()`` can serialize it.  A drained executor
+        does not resume in place: rebuild with ``restore`` (the drain
+        may have advanced pods far past the deferred frontier's ready
+        ticks, and only a rebuild replays the frontier at its true
+        ticks).  Returns ``done()``."""
+        self._draining = True
+        return self.advance()
+
+    def drained(self) -> bool:
+        return (self._trace is not None and self._draining
+                and all(q.empty() for q in self._queues)
+                and (self._sync is None
+                     or self._sync.pending_messages == 0))
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Serializable (plain JSON-able dict) state of a drained run.
+        See ``repro.sim.serialize`` for the versioned on-disk format."""
+        if not self.drained():
+            raise RuntimeError("snapshot() requires drain() first "
+                               "(gem5: drain-then-serialize)")
+        wires = []
+        for w in self._wires:
+            wires.append([[x, y, d, l.busy_until, l.bytes_carried,
+                           l.transfers]
+                          for (x, y, d), l in sorted(w._net.links.items())])
+        rendezvous = []
+        for key in sorted(self._dcn._rendezvous):
+            r = self._dcn._rendezvous[key]
+            rendezvous.append({
+                "op_idx": key,
+                "arrivals": [[w["pod"], w["ready"]] for w in r["waiters"]],
+            })
+        return {
+            "tick": self.now,
+            "pod_dims": [self.machine.pod.nx, self.machine.pod.ny],
+            "queues": [q.snapshot() for q in self._queues],
+            "op_end": [list(row) for row in self._op_end],
+            "deferred": [list(t) for t in self._deferred],
+            "rendezvous": rendezvous,
+            "chip_free": [c.free_tick for c in self._chips],
+            "wires": wires,
+            "dcn_uplinks": [[l.busy_until, l.bytes_carried, l.transfers]
+                            for l in self._dcn.uplinks],
+            "stats": self.sim_root.stats.state_dict(),
+            "totals": dict(self._totals),
+            "timeline": list(self._timeline),
+        }
+
+    def restore(self, trace: HloTrace,
+                state: Dict[str, Any]) -> "TraceExecutor":
+        """Rebuild a drained run from ``snapshot()`` state and resume.
+
+        The machine this executor wraps may be *re-parameterized*
+        relative to the one the snapshot was taken on (the gem5 DSE
+        trick: checkpoint once, sweep hardware from the checkpoint) —
+        pod count must match (the trace is per-pod state); torus link
+        occupancy transfers only when the pod dimensions match too.
+        On the *same* machine, a restored run's final tick and stats
+        tree are identical to one that never paused: the deferred
+        frontier is re-scheduled at its exact ready ticks on fresh
+        queues, so event order replays deterministically.
+        """
+        pods = self.machine.num_pods
+        if pods != len(state["op_end"]):
+            raise ValueError(
+                f"cannot restore a {len(state['op_end'])}-pod snapshot "
+                f"onto a {pods}-pod machine (re-parameterize speeds, "
+                "not the pod count)")
+        self._setup(trace)
+        nops = len(trace.ops)
+        self._op_end = [[int(e) for e in row] for row in state["op_end"]]
+        self._ncomplete = sum(1 for row in self._op_end
+                              for e in row if e >= 0)
+        for p in range(pods):
+            for idx, op in enumerate(trace.ops):
+                self._remaining[p][idx] = sum(
+                    1 for d in op.deps if self._op_end[p][d] < 0)
+        self._totals = {k: float(v) for k, v in state["totals"].items()}
+        self._timeline = list(state.get("timeline", []))
+        # carry the event accounting across the checkpoint: a restored
+        # run's ExecResult.events then counts pre-pause + post-restore
+        # firings (plus one re-issue event per deferred frontier op —
+        # the only events a never-paused run does not have)
+        for q, qsnap in zip(self._queues, state.get("queues", [])):
+            q.events_fired = int(qsnap["events_fired"])
+        self.sim_root.stats.load_state_dict(state["stats"])
+        for p, free in enumerate(state["chip_free"]):
+            self._chips[p]._free = int(free)
+        same_dims = (list(state.get("pod_dims", [])) ==
+                     [self.machine.pod.nx, self.machine.pod.ny])
+        if same_dims:
+            for p, rows in enumerate(state["wires"]):
+                net = self._wires[p]._net
+                for x, y, d, busy, nbytes, transfers in rows:
+                    link = net._link(int(x), int(y), d)
+                    link.busy_until = busy
+                    link.bytes_carried = nbytes
+                    link.transfers = int(transfers)
+        for i, (busy, nbytes, transfers) in enumerate(state["dcn_uplinks"]):
+            if i < len(self._dcn.uplinks):
+                link = self._dcn.uplinks[i]
+                link.busy_until = busy
+                link.bytes_carried = nbytes
+                link.transfers = int(transfers)
+        # partial cross-pod rendezvous: re-arrive the pods that had
+        # already reached the fabric (synchronous port sends; the
+        # transaction completes when the remaining pods arrive)
+        for r in state["rendezvous"]:
+            idx = int(r["op_idx"])
+            for p, ready in r["arrivals"]:
+                self._chips[int(p)].issue_collective(
+                    self._payload(int(p), idx, int(ready)))
+        # the deferred frontier replays as issue *events* at its exact
+        # ready ticks: arbitration order interleaves with post-restore
+        # completions exactly as in an uninterrupted run
+        for p, idx, ready in state["deferred"]:
+            p, idx, ready = int(p), int(idx), int(ready)
+            self._queues[p].schedule(
+                lambda p=p, idx=idx, ready=ready: self._issue(p, idx, ready),
+                ready, name=f"issue:{self._trace.ops[idx].name or idx}")
+        return self
+
+    # -- lifecycle: result -------------------------------------------------
+    def result(self) -> ExecResult:
+        trace = self._trace
+        if trace is None:
+            raise RuntimeError("result() before begin()")
+        pods = self.machine.num_pods
+        nops = len(trace.ops)
+        if not self.done():
+            incomplete = [idx for idx in range(nops)
+                          if any(self._op_end[p][idx] < 0
+                                 for p in range(pods))]
             raise RuntimeError(
                 f"trace deadlock: ops {incomplete[:5]} never completed "
                 "(cyclic or dangling deps)")
-
-        makespan_tick = max((max(ends) for ends in op_end), default=0) \
-            if nops else 0
-        per_pod_end = [max(chips[p].free_tick, wires[p].busy_tick())
+        makespan_tick = max((max(ends) for ends in self._op_end),
+                            default=0) if nops else 0
+        per_pod_end = [max(self._chips[p].free_tick,
+                           self._wires[p].busy_tick())
                        / TICKS_PER_S for p in range(pods)]
-
         return ExecResult(
             makespan_s=makespan_tick / TICKS_PER_S,
-            compute_s=totals["compute"],
-            collective_s=totals["coll"],
-            exposed_collective_s=min(totals["exposed"], totals["coll"]),
+            compute_s=self._totals["compute"],
+            collective_s=self._totals["coll"],
+            exposed_collective_s=min(self._totals["exposed"],
+                                     self._totals["coll"]),
             per_chip_busy_s=per_pod_end,
-            events=sum(q.events_fired for q in queues),
-            timeline=timeline,
-            stats=(root.stats.flat() if self.record_stats else None),
+            events=sum(q.events_fired for q in self._queues),
+            timeline=self._timeline,
+            stats=(self.sim_root.stats.flat()
+                   if self.record_stats else None),
         )
+
+    # ------------------------------------------------------------------
+    def execute(self, trace: HloTrace) -> ExecResult:
+        self.begin(trace)
+        self.advance()
+        return self.result()
 
 
 def predict_step_time(machine: ClusterModel, trace: HloTrace,

@@ -119,6 +119,17 @@ class EventQueue:
         """Heap entries still stored (cancelled included) — leak probe."""
         return len(self._heap)
 
+    def snapshot(self) -> dict:
+        """Tick snapshot for checkpointing (repro.sim.serialize).
+
+        Only bookkeeping is captured — scheduled callbacks are Python
+        closures and cannot be serialized, which is why checkpointing
+        *drains* the simulation first (gem5 ``drain()`` then
+        ``serialize()``): a drained queue has no pending events, so
+        ``now`` + ``events_fired`` fully describe it.
+        """
+        return {"now": self._now, "events_fired": self.events_fired}
+
     # ------------------------------------------------------------------
     def schedule(self, callback: Callable[[], None], tick: int,
                  priority: int = PRI_DEFAULT, name: str = "") -> Event:
@@ -200,6 +211,11 @@ class QuantumSync:
         self.barriers = 0
         self._pending: list[tuple[int, EventQueue, Callable[[], None]]] = []
 
+    @property
+    def pending_messages(self) -> int:
+        """Cross-queue messages not yet delivered (0 when drained)."""
+        return len(self._pending)
+
     def send(self, src_now: int, dst: EventQueue, callback: Callable[[], None],
              latency: int) -> None:
         """Cross-queue message: delivered at the first quantum boundary
@@ -230,7 +246,9 @@ class QuantumSync:
             self._advance_to(t)
         return self.barriers
 
-    def run_until_drained(self, max_tick: Optional[int] = None) -> int:
+    def run_until_drained(self, max_tick: Optional[int] = None,
+                          stop_check: Optional[Callable[[], bool]] = None
+                          ) -> int:
         """Run lockstep quanta until every queue is empty and no cross-
         queue message is pending.  Returns the final synchronized tick.
 
@@ -240,9 +258,17 @@ class QuantumSync:
         quantum *semantics* are identical: no queue observes another
         queue's in-quantum events, and deliveries land exactly on the
         boundary ``send`` computed for them.
+
+        ``stop_check`` is evaluated at every quantum boundary (the only
+        points where global state is observable in dist-gem5); returning
+        True pauses the run there — the caller may resume by calling
+        ``run_until_drained`` again.  This is how ``repro.sim.Simulator``
+        delivers exit events without breaking quantum semantics.
         """
         t = (max(q.now for q in self.queues) // self.quantum) * self.quantum
         while True:
+            if stop_check is not None and stop_check():
+                return t
             upcoming = [nt for nt in (q.next_tick() for q in self.queues)
                         if nt is not None]
             if self._pending:

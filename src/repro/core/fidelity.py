@@ -146,6 +146,13 @@ class DryRunBackend(Backend):
 class DesimBackend(Backend):
     """Discrete-event timing replay of the compiled step.
 
+    Runs through the ``repro.sim.Simulator`` front-end (the gem5-stdlib
+    layer), so the same run can be scripted with exit events,
+    checkpointed, or sampled by driving a ``Simulator``/``Board``
+    directly — this backend is the one-shot convenience path.
+    ``board`` accepts a prebuilt ``repro.sim.boards.Board`` (or use
+    ``machine=`` with a raw ClusterModel, as before).
+
     ``record_stats=True`` additionally dumps the run's gem5-style
     statistics tree (per-chip/per-wire/fabric counters) into
     ``report.detail["stats"]`` (flat dict) and
@@ -154,27 +161,30 @@ class DesimBackend(Backend):
 
     kind = "desim"
 
-    def __init__(self, machine=None, record_stats: bool = False):
+    def __init__(self, machine=None, record_stats: bool = False,
+                 board=None):
         # machine: repro.core.desim.machine.ClusterModel (built lazily)
         self.machine = machine
+        self.board = board
         self.record_stats = record_stats
 
     def run(self, prog: StepProgram,
             dryrun_report: Optional[StepReport] = None) -> StepReport:
         from repro.core.desim import machine as mc
-        from repro.core.desim.executor import TraceExecutor
         from repro.core.desim.trace import HloTrace
+        from repro.sim import Board, Simulator
 
         if dryrun_report is None:
             dryrun_report = DryRunBackend().run(prog)
-        machine = self.machine or mc.default_cluster(prog.mesh)
+        board = self.board or Board(
+            machine=self.machine or mc.default_cluster(prog.mesh))
         t0 = time.perf_counter()
         trace = HloTrace.from_hlo_text(
             dryrun_report.detail["hlo"], name=prog.name,
             total_flops=dryrun_report.flops or 0.0,
             total_bytes=dryrun_report.bytes_accessed or 0.0)
-        ex = TraceExecutor(machine, record_stats=self.record_stats)
-        result = ex.execute(trace)
+        sim = Simulator(board, trace, record_stats=self.record_stats)
+        result = sim.run_to_completion()
         dt = time.perf_counter() - t0
         rep = StepReport(self.kind, prog.name, wall_s=dt,
                          predicted_step_s=result.makespan_s,
@@ -184,9 +194,9 @@ class DesimBackend(Backend):
                          memory=dryrun_report.memory)
         rep.detail["desim"] = result
         rep.detail["hlo"] = dryrun_report.detail["hlo"]
-        if self.record_stats and ex.sim_root is not None:
+        if self.record_stats and sim.sim_root is not None:
             rep.detail["stats"] = result.stats
-            rep.detail["stats_text"] = ex.sim_root.stats.dump_text()
+            rep.detail["stats_text"] = sim.sim_root.stats.dump_text()
         return rep
 
 

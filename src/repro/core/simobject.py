@@ -148,7 +148,13 @@ class SimObject:
     def find(self, path: str) -> "SimObject":
         obj: SimObject = self
         for part in path.split("."):
-            obj = obj._children[part]
+            try:
+                obj = obj._children[part]
+            except KeyError:
+                raise KeyError(
+                    f"no child {part!r} under {obj.path!r} (resolving "
+                    f"{path!r}; children: {sorted(obj._children)})"
+                    ) from None
         return obj
 
     # -- lifecycle -------------------------------------------------------
@@ -167,6 +173,39 @@ class SimObject:
         self.startup()
         object.__setattr__(self, "_frozen", True)
         return self
+
+    # -- checkpointing (repro.sim.serialize) -------------------------------
+    def serialize(self) -> Dict[str, Any]:
+        """Params + children as a plain JSON-able tree (gem5's
+        ``config.ini`` analogue, used by ``repro.sim.serialize`` so a
+        checkpoint records the machine it was taken on)."""
+        return {
+            "class": type(self).__name__,
+            "name": self._name,
+            "params": dict(self.params_dict()),
+            "children": {k: c.serialize() for k, c in self._children.items()},
+        }
+
+    def load_serialized(self, d: Dict[str, Any], strict: bool = True) -> None:
+        """Apply a :meth:`serialize` dict onto this (unfrozen) tree.
+
+        The tree must already have the same shape — this restores
+        *parameters*, it does not construct objects (class registries
+        are the caller's business; see ``repro.sim.serialize.
+        machine_from_dict`` for the machine-model instance)."""
+        declared = self._declared_params()
+        for k, v in d.get("params", {}).items():
+            if k in declared:
+                setattr(self, k, v)
+            elif strict:
+                raise ParamError(
+                    f"{type(self).__name__} has no param {k!r}")
+        for k, cd in d.get("children", {}).items():
+            child = self._children.get(k)
+            if child is not None:
+                child.load_serialized(cd, strict=strict)
+            elif strict:
+                raise KeyError(f"no child {k!r} under {self.path!r}")
 
     # -- introspection -----------------------------------------------------
     def describe(self, indent: int = 0) -> str:

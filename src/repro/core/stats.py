@@ -39,6 +39,16 @@ class Stat:
         return {"kind": self.kind, "name": self.name, "desc": self.desc,
                 "unit": self.unit, "value": self.value()}
 
+    # -- checkpointing (repro.sim.serialize) ---------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Internal accumulator state, not just the rendered value —
+        restoring it and continuing must be bit-identical to never
+        having paused (gem5 serializes stats the same way)."""
+        return {}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        pass
+
 
 class Scalar(Stat):
     kind = "scalar"
@@ -58,6 +68,12 @@ class Scalar(Stat):
 
     def reset(self) -> None:
         self._v = 0.0
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"v": self._v}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self._v = float(d["v"])
 
 
 class Vector(Stat):
@@ -83,6 +99,15 @@ class Vector(Stat):
 
     def reset(self) -> None:
         self._v = [0.0] * len(self._v)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"v": list(self._v)}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        if len(d["v"]) != len(self._v):
+            raise ValueError(f"vector {self.name}: size mismatch "
+                             f"{len(d['v'])} != {len(self._v)}")
+        self._v = [float(x) for x in d["v"]]
 
 
 class Distribution(Stat):
@@ -127,6 +152,19 @@ class Distribution(Stat):
         self._m2 = 0.0
         self._min = float("inf")
         self._max = float("-inf")
+
+    def state_dict(self) -> Dict[str, Any]:
+        # Welford accumulators, so a restored run keeps streaming into
+        # the same distribution (mean/m2 continue exactly)
+        return {"count": self._count, "mean": self._mean, "m2": self._m2,
+                "min": self._min, "max": self._max}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self._count = int(d["count"])
+        self._mean = float(d["mean"])
+        self._m2 = float(d["m2"])
+        self._min = float(d["min"])
+        self._max = float(d["max"])
 
 
 class Formula(Stat):
@@ -232,6 +270,35 @@ class StatGroup:
             s.reset()
         for c in self._children:
             c.reset()
+
+    # -- checkpointing (repro.sim.serialize) ----------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Recursive accumulator snapshot keyed by stat/child name.
+        Child names must be unique within a group (they are: the stats
+        tree mirrors the SimObject tree, whose children are attributes).
+        """
+        return {
+            "stats": {k: s.state_dict() for k, s in self._stats.items()},
+            "children": {c.name: c.state_dict() for c in self._children},
+        }
+
+    def load_state_dict(self, d: Dict[str, Any],
+                        strict: bool = False) -> None:
+        """Restore a ``state_dict``.  Stats/children present in the dict
+        but missing from this tree (or vice versa) are skipped unless
+        ``strict`` — restoring onto a re-parameterized machine keeps the
+        overlap."""
+        for k, sd in d.get("stats", {}).items():
+            if k in self._stats:
+                self._stats[k].load_state_dict(sd)
+            elif strict:
+                raise KeyError(f"no stat {k!r} in group {self.name!r}")
+        by_name = {c.name: c for c in self._children}
+        for k, cd in d.get("children", {}).items():
+            if k in by_name:
+                by_name[k].load_state_dict(cd, strict=strict)
+            elif strict:
+                raise KeyError(f"no child group {k!r} under {self.name!r}")
 
 
 class TimeSeries:

@@ -1,0 +1,35 @@
+"""repro.sim — the gem5-stdlib-style simulation front-end.
+
+One import gives the full workflow the gem5 paper's pillars describe
+(§1.3 checkpoint/restore, fast-forward, sampled detail; PAPERS.md
+"Toward Reproducible and Standardized Computer Architecture
+Simulation"):
+
+* :class:`Simulator` + :class:`ExitEvent` — instantiate/run/exit loop.
+* :mod:`repro.sim.boards` — prebuilt machines (``v5e_pod()``, ...).
+* :mod:`repro.sim.serialize` — drain-then-serialize checkpoints.
+* :mod:`repro.sim.sampling` — SimPoint/SMARTS sampled simulation.
+"""
+
+from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
+                              v5e_multipod, v5e_pod, v5e_straggler)
+from repro.sim.sampling import (SampledResult, SampledSimulation,
+                                SamplePlan, atomic_step_time_s, sampled_run)
+from repro.sim.serialize import (CHECKPOINT_VERSION, CheckpointError,
+                                 checkpoint_executor, load_checkpoint,
+                                 machine_from_dict, restore_executor,
+                                 save_checkpoint)
+from repro.sim.simulator import (ExitEvent, ExitEventType, Simulator,
+                                 SteadyStateWorkload, repeat_trace)
+
+__all__ = [
+    "Board", "BOARDS", "get_board", "v5e_pod", "v5e_multipod",
+    "v5e_straggler", "v5e_degraded",
+    "Simulator", "ExitEvent", "ExitEventType", "SteadyStateWorkload",
+    "repeat_trace",
+    "SamplePlan", "SampledResult", "SampledSimulation", "sampled_run",
+    "atomic_step_time_s",
+    "CHECKPOINT_VERSION", "CheckpointError", "checkpoint_executor",
+    "save_checkpoint", "load_checkpoint", "restore_executor",
+    "machine_from_dict",
+]

@@ -1,0 +1,133 @@
+"""Prebuilt boards (the gem5 stdlib ``X86DemoBoard`` analogue).
+
+"Toward Reproducible and Standardized Computer Architecture Simulation
+with gem5" (PAPERS.md) attributes much of the stdlib's usability to
+*prebuilt boards*: known-good, named hardware configurations users pass
+straight to ``Simulator`` instead of hand-wiring SimObjects.  The g5x
+analogue is a catalog of instantiated :class:`ClusterModel`s bundled
+with the software-side choices a run needs (collective algorithm,
+straggler injection) — everything ``TraceExecutor`` takes beyond the
+trace itself.
+
+Boards accept per-component override dicts so DSE sweeps stay
+one-liners::
+
+    v5e_pod(chip={"hbm_bw": 2 * 819e9}, ici={"bw": 100e9})
+
+Catalog:
+
+* ``v5e_pod``       — one 16x16 TPU v5e pod (the default machine).
+* ``v5e_multipod``  — N pods over DCN with dist-gem5 quantum sync.
+* ``v5e_straggler`` — multipod with one (or more) slow pods, the
+                      fault-injection variant (§straggler watchdog).
+* ``v5e_degraded``  — a pod with derated HBM/ICI, the "sick hardware"
+                      variant for capacity planning.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.machine import ClusterModel
+
+
+@dataclass
+class Board:
+    """A machine plus the run-level knobs ``Simulator`` needs."""
+
+    machine: ClusterModel
+    algorithm: str = "torus2d"
+    straggler_slowdowns: Optional[List[float]] = None
+    name: str = "board"
+
+    def instantiate(self) -> "Board":
+        if not getattr(self.machine, "_frozen", False):
+            self.machine.instantiate()
+        return self
+
+    def executor(self, **kw) -> TraceExecutor:
+        """A TraceExecutor wired for this board (kw: record_stats,
+        record_timeline, contention, ... pass through)."""
+        self.instantiate()
+        kw.setdefault("algorithm", self.algorithm)
+        kw.setdefault("straggler_slowdowns", self.straggler_slowdowns)
+        return TraceExecutor(self.machine, **kw)
+
+
+def _apply(obj, overrides: Optional[Dict]) -> None:
+    for k, v in (overrides or {}).items():
+        setattr(obj, k, v)
+
+
+def _cluster(name: str, num_pods: int, quantum_ns: Optional[int],
+             nx: int, ny: int, chip: Optional[Dict], ici: Optional[Dict],
+             dcn: Optional[Dict]) -> ClusterModel:
+    kw = {"num_pods": num_pods}
+    if quantum_ns is not None:
+        kw["quantum_ns"] = quantum_ns
+    m = ClusterModel(name, **kw)
+    m.pod.nx, m.pod.ny = nx, ny
+    _apply(m.pod.chip, chip)
+    _apply(m.pod.ici, ici)
+    _apply(m.dcn, dcn)
+    m.instantiate()
+    return m
+
+
+def v5e_pod(nx: int = 16, ny: int = 16, *, chip: Optional[Dict] = None,
+            ici: Optional[Dict] = None, algorithm: str = "torus2d") -> Board:
+    """One TPU v5e pod: a ``nx x ny`` ICI torus of v5e chips."""
+    m = _cluster("cluster", 1, None, nx, ny, chip, ici, None)
+    return Board(m, algorithm=algorithm, name=f"v5e_pod_{nx}x{ny}")
+
+
+def v5e_multipod(num_pods: int = 2, quantum_ns: int = 100_000,
+                 nx: int = 16, ny: int = 16, *,
+                 chip: Optional[Dict] = None, ici: Optional[Dict] = None,
+                 dcn: Optional[Dict] = None,
+                 algorithm: str = "torus2d") -> Board:
+    """``num_pods`` v5e pods joined by DCN, synchronized in dist-gem5
+    quanta of ``quantum_ns`` (0 disables the quantum error model)."""
+    m = _cluster("cluster", num_pods, quantum_ns, nx, ny, chip, ici, dcn)
+    return Board(m, algorithm=algorithm, name=f"v5e_multipod_{num_pods}")
+
+
+def v5e_straggler(num_pods: int = 2, slowdown: float = 2.0,
+                  slow_pods: Optional[List[int]] = None,
+                  quantum_ns: int = 100_000, nx: int = 16, ny: int = 16,
+                  ) -> Board:
+    """Multipod with straggling pods (default: the last pod runs at
+    ``1/slowdown`` speed) — the fault-injection board."""
+    m = _cluster("cluster", num_pods, quantum_ns, nx, ny, None, None, None)
+    slow = [1.0] * num_pods
+    for p in (slow_pods if slow_pods is not None else [num_pods - 1]):
+        slow[p] = slowdown
+    return Board(m, straggler_slowdowns=slow,
+                 name=f"v5e_straggler_{num_pods}x{slowdown}")
+
+
+def v5e_degraded(hbm_frac: float = 0.5, ici_frac: float = 0.5,
+                 nx: int = 16, ny: int = 16) -> Board:
+    """A single pod with derated HBM and ICI bandwidth — what a step
+    costs on sick hardware (capacity-planning variant)."""
+    m = _cluster("cluster", 1, None, nx, ny,
+                 chip={"hbm_bw": 819e9 * hbm_frac},
+                 ici={"bw": 50e9 * ici_frac}, dcn=None)
+    return Board(m, name=f"v5e_degraded_h{hbm_frac}_i{ici_frac}")
+
+
+BOARDS: Dict[str, Callable[..., Board]] = {
+    "v5e_pod": v5e_pod,
+    "v5e_multipod": v5e_multipod,
+    "v5e_straggler": v5e_straggler,
+    "v5e_degraded": v5e_degraded,
+}
+
+
+def get_board(name: str, **kw) -> Board:
+    try:
+        return BOARDS[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown board {name!r}; one of {list(BOARDS)}")

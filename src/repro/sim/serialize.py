@@ -1,0 +1,141 @@
+"""gem5-style drain-then-serialize checkpointing (paper §2.7).
+
+gem5 checkpoints by *draining* the system (every SimObject finishes its
+in-flight transactions) and then serializing the SimObject tree to a
+checkpoint directory; restoring may target a *differently configured*
+system — the canonical workflow is "checkpoint after OS boot once,
+restore onto every cache hierarchy you want to sweep".  g5x reproduces
+that for trace replay:
+
+* ``checkpoint_executor`` — a drained :class:`TraceExecutor` becomes a
+  versioned, plain-JSON dict: the machine description (``SimObject.
+  serialize``, gem5's config.ini analogue), the executor config, the
+  elastic trace, and the drained run state (completed-op ticks, the
+  deferred frontier, partial DCN rendezvous, per-link occupancy, the
+  full stats-tree accumulator state, per-pod queue tick snapshots).
+* ``restore_executor`` — rebuilds a ready-to-``advance`` executor from
+  a checkpoint, optionally onto a **re-parameterized machine** (sweep
+  HBM/ICI/DCN speeds from one checkpoint; pod count must match).
+  Restored on the same machine, the resumed run's final tick and stats
+  tree are identical to a run that never paused (test-enforced in
+  ``tests/test_sim_checkpoint.py``).
+
+The file format is one JSON document, ``version``-stamped so future
+layouts can migrate old checkpoints instead of mis-reading them.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.trace import HloTrace
+
+CHECKPOINT_VERSION = 1
+CHECKPOINT_FORMAT = "repro.sim.checkpoint"
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# machine description
+# ---------------------------------------------------------------------------
+
+def machine_to_dict(machine: ClusterModel) -> Dict[str, Any]:
+    return machine.serialize()
+
+
+def machine_from_dict(d: Dict[str, Any]) -> ClusterModel:
+    """Rebuild an instantiated ClusterModel from ``machine_to_dict``.
+
+    Construction is shape-specific (a ClusterModel always owns
+    pod/chip/ici/dcn children), parameter application is generic
+    (``SimObject.load_serialized``).
+    """
+    m = ClusterModel(d.get("name", "cluster"))
+    m.load_serialized(d, strict=False)
+    m.instantiate()
+    return m
+
+
+# ---------------------------------------------------------------------------
+# checkpoint build / save / load / restore
+# ---------------------------------------------------------------------------
+
+def checkpoint_executor(ex: TraceExecutor) -> Dict[str, Any]:
+    """Serialize a drained executor (call ``ex.drain()`` first)."""
+    state = ex.snapshot()          # raises unless drained
+    return {
+        "format": CHECKPOINT_FORMAT,
+        "version": CHECKPOINT_VERSION,
+        "tick": state["tick"],
+        "machine": machine_to_dict(ex.machine),
+        "executor": {
+            "algorithm": ex.algorithm,
+            "straggler_slowdowns": list(ex.slow),
+            "contention": ex.contention,
+            "record_timeline": ex.record_timeline,
+            "record_stats": ex.record_stats,
+        },
+        "trace": json.loads(ex._trace.to_json()),
+        "state": state,
+    }
+
+
+def save_checkpoint(ckpt: Dict[str, Any], path: str) -> str:
+    _check_header(ckpt)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(ckpt, f)
+    os.replace(tmp, path)
+    return path
+
+
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        ckpt = json.load(f)
+    _check_header(ckpt)
+    return ckpt
+
+
+def _check_header(ckpt: Dict[str, Any]) -> None:
+    if ckpt.get("format") != CHECKPOINT_FORMAT:
+        raise CheckpointError(
+            f"not a {CHECKPOINT_FORMAT} document "
+            f"(format={ckpt.get('format')!r})")
+    if ckpt.get("version") != CHECKPOINT_VERSION:
+        raise CheckpointError(
+            f"checkpoint version {ckpt.get('version')!r} != "
+            f"{CHECKPOINT_VERSION} (no migration registered)")
+
+
+def trace_from_checkpoint(ckpt: Dict[str, Any]) -> HloTrace:
+    return HloTrace.from_json(json.dumps(ckpt["trace"]))
+
+
+def restore_executor(ckpt: Dict[str, Any],
+                     machine: Optional[ClusterModel] = None,
+                     **overrides) -> TraceExecutor:
+    """A ready-to-``advance`` executor from a checkpoint dict.
+
+    ``machine``: restore onto this (instantiated) machine instead of
+    rebuilding the checkpointed one — the DSE re-parameterization hook.
+    ``overrides``: TraceExecutor kwargs overriding the checkpointed
+    config (e.g. ``record_stats=True``).
+    """
+    _check_header(ckpt)
+    trace = trace_from_checkpoint(ckpt)
+    if machine is None:
+        machine = machine_from_dict(ckpt["machine"])
+    cfg = dict(ckpt["executor"])
+    cfg.update(overrides)
+    ex = TraceExecutor(machine, **cfg)
+    return ex.restore(trace, ckpt["state"])

@@ -1,0 +1,350 @@
+"""gem5-stdlib-style ``Simulator`` front-end with typed exit events.
+
+The gem5 standard library (PAPERS.md: "Toward Reproducible and
+Standardized Computer Architecture Simulation with gem5") made gem5
+usable at scale with one object: ``Simulator(board, workload)`` owns
+``m5.instantiate()``, drives the event loop, and turns simulation-exit
+causes into typed ``ExitEvent``s the user scripts against in plain
+Python — checkpoint here, switch CPU models there, stop at max-tick.
+Before it, every config hand-rolled the instantiate/run/exit plumbing;
+exactly the state of our desim drivers after PR 1.
+
+g5x reproduction::
+
+    sim = Simulator(v5e_multipod(2), trace)
+    sim.schedule_max_tick(5_000_000)
+    sim.schedule_checkpoint(20_000_000)
+    for ev in sim.run():                      # generator of ExitEvents
+        if ev.kind is ExitEventType.MAX_TICK:
+            print("warmed up at", ev.tick)    # ... then keep iterating
+        elif ev.kind is ExitEventType.CHECKPOINT:
+            path = ev.payload["path"]         # restore later / elsewhere
+    res = sim.result()                        # ExecResult of the run
+
+Exit-event semantics:
+
+* ``MAX_TICK``     — a ``schedule_max_tick`` point was reached; the sim
+                     is paused (no event at tick <= point pending).
+* ``CHECKPOINT``   — the run was gem5-drained, serialized (see
+                     ``repro.sim.serialize``), and resumed *through the
+                     restore path* (resume == restore, so every
+                     checkpoint is exercised end-to-end).
+* ``WORK_BEGIN`` / ``WORK_END`` — a trace op named ``work_begin*`` /
+                     ``work_end*`` completed on pod 0 (gem5 work items,
+                     §2.7: delimit the region of interest in the
+                     workload itself).  Under QuantumSync these are
+                     delivered at the next quantum boundary — the only
+                     points where global state is observable in
+                     dist-gem5.
+* ``SAMPLE_BEGIN`` — a sampled-simulation window starts (emitted by
+                     ``repro.sim.sampling``, not by ``Simulator``).
+* ``DONE``         — the workload completed; ``result()`` is available.
+"""
+
+from __future__ import annotations
+
+import enum
+import os
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.desim.executor import ExecResult, TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.simnodes import TICKS_PER_S
+from repro.core.desim.trace import HloTrace
+from repro.sim.boards import Board
+
+
+class ExitEventType(enum.Enum):
+    MAX_TICK = "max_tick"
+    CHECKPOINT = "checkpoint"
+    WORK_BEGIN = "work_begin"
+    WORK_END = "work_end"
+    SAMPLE_BEGIN = "sample_begin"
+    DONE = "done"
+
+
+@dataclass(frozen=True)
+class ExitEvent:
+    """One typed simulation exit (gem5 ``ExitEvent`` analogue)."""
+
+    kind: ExitEventType
+    tick: int
+    cause: str = ""
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def time_s(self) -> float:
+        return self.tick / TICKS_PER_S
+
+    def __str__(self) -> str:
+        return (f"ExitEvent({self.kind.value} @ {self.tick} "
+                f"[{self.time_s:.6f}s] {self.cause})")
+
+
+WORK_BEGIN_PREFIX = "work_begin"
+WORK_END_PREFIX = "work_end"
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+def repeat_trace(step: HloTrace, num_steps: int,
+                 name: Optional[str] = None) -> HloTrace:
+    """Chain ``num_steps`` copies of a one-step trace: each step's root
+    ops depend on the previous step's sink ops (steady-state training:
+    step N+1 cannot start before step N's last collective lands)."""
+    if num_steps < 1:
+        raise ValueError("num_steps must be >= 1")
+    n = len(step.ops)
+    has_dependent = [False] * n
+    for op in step.ops:
+        for d in op.deps:
+            has_dependent[d] = True
+    sinks = tuple(i for i in range(n) if not has_dependent[i])
+    out = HloTrace(name or f"{step.name}x{num_steps}",
+                   meta=dict(step.meta, steps=num_steps))
+    for rep in range(num_steps):
+        off = rep * n
+        for idx, op in enumerate(step.ops):
+            deps = tuple(d + off for d in op.deps)
+            if not deps and rep > 0:
+                deps = tuple(s + off - n for s in sinks)
+            out.ops.append(replace(
+                op, deps=deps,
+                name=f"step{rep}/{op.name}" if op.name else ""))
+    return out
+
+
+@dataclass
+class SteadyStateWorkload:
+    """``num_steps`` repetitions of one step trace (a training run)."""
+
+    step: HloTrace
+    num_steps: int
+
+    def trace(self) -> HloTrace:
+        return repeat_trace(self.step, self.num_steps)
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+class Simulator:
+    """Owns instantiate/startup and the exit-event loop of one run.
+
+    ``board``    : a :class:`repro.sim.boards.Board` (or a bare
+                   ``ClusterModel``, wrapped with default knobs).
+    ``workload`` : an :class:`HloTrace`, or anything with ``.trace()``
+                   (e.g. ``SteadyStateWorkload``).
+    ``checkpoint_dir`` : when set, CHECKPOINT exits also write
+                   ``ckpt_tick<T>.json`` there (see serialize.py).
+    """
+
+    def __init__(self, board, workload, *,
+                 checkpoint_dir: Optional[str] = None,
+                 record_stats: bool = True, record_timeline: bool = False,
+                 contention: bool = True):
+        if isinstance(board, ClusterModel):
+            board = Board(machine=board)
+        self.board = board.instantiate()     # Simulator owns instantiate()
+        self._trace = (workload if isinstance(workload, HloTrace)
+                       else workload.trace())
+        self._ex_cfg = dict(record_stats=record_stats,
+                            record_timeline=record_timeline,
+                            contention=contention)
+        self._ex = board.executor(**self._ex_cfg)
+        self._has_markers = any(
+            (op.name or "").rpartition("/")[2].startswith(
+                (WORK_BEGIN_PREFIX, WORK_END_PREFIX))
+            for op in self._trace.ops)
+        self._marker_exits: deque = deque()
+        self._scheduled: List[Tuple[int, int, ExitEventType]] = []
+        self._sched_seq = 0
+        self._started = False
+        self._result: Optional[ExecResult] = None
+        self.checkpoint_dir = checkpoint_dir
+        self.last_checkpoint: Optional[Dict[str, Any]] = None
+        self.checkpoint_paths: List[str] = []
+
+    # -- construction from a checkpoint ---------------------------------
+    @classmethod
+    def from_checkpoint(cls, source, board: Optional[Board] = None, *,
+                        checkpoint_dir: Optional[str] = None) -> "Simulator":
+        """Resume a serialized simulation, optionally onto a
+        re-parameterized ``board`` (the checkpoint-once, sweep-hardware
+        workflow).  ``source`` is a path or a checkpoint dict."""
+        from repro.sim import serialize as ser
+        ckpt = (ser.load_checkpoint(source) if isinstance(source, str)
+                else source)
+        cfg = ckpt["executor"]
+        explicit_board = board is not None
+        if board is None:
+            board = Board(machine=ser.machine_from_dict(ckpt["machine"]),
+                          algorithm=cfg["algorithm"],
+                          straggler_slowdowns=cfg["straggler_slowdowns"])
+        sim = cls(board, ser.trace_from_checkpoint(ckpt),
+                  checkpoint_dir=checkpoint_dir,
+                  record_stats=cfg["record_stats"],
+                  record_timeline=cfg["record_timeline"],
+                  contention=cfg["contention"])
+        overrides = dict(sim._ex_cfg)
+        if explicit_board:
+            # an explicitly-passed board wins wholesale: it bundles the
+            # run knobs (algorithm, stragglers), not just the machine —
+            # a board-based DSE re-sweep must actually apply them
+            overrides.update(
+                algorithm=board.algorithm,
+                straggler_slowdowns=board.straggler_slowdowns)
+        sim._ex = ser.restore_executor(ckpt, machine=board.machine,
+                                       **overrides)
+        sim._install_hook()
+        sim._started = True
+        return sim
+
+    # -- exit scheduling --------------------------------------------------
+    def _schedule(self, tick: int, kind: ExitEventType) -> None:
+        self._scheduled.append((int(tick), self._sched_seq, kind))
+        self._sched_seq += 1
+        self._scheduled.sort()
+
+    def schedule_max_tick(self, tick: int) -> None:
+        """Pause and yield ``MAX_TICK`` once no event at tick <= ``tick``
+        remains (gem5 ``simulate(ticks)``)."""
+        self._schedule(tick, ExitEventType.MAX_TICK)
+
+    def schedule_checkpoint(self, tick: int) -> None:
+        """Drain + serialize at the first pause point >= ``tick`` and
+        yield ``CHECKPOINT`` (gem5 checkpoint exit event)."""
+        self._schedule(tick, ExitEventType.CHECKPOINT)
+
+    # -- internals --------------------------------------------------------
+    def _install_hook(self) -> None:
+        self._ex.op_hook = self._on_op if self._has_markers else None
+
+    def _on_op(self, op, idx, start, end) -> None:
+        base = (op.name or "").rpartition("/")[2]
+        if base.startswith(WORK_BEGIN_PREFIX):
+            kind = ExitEventType.WORK_BEGIN
+        elif base.startswith(WORK_END_PREFIX):
+            kind = ExitEventType.WORK_END
+        else:
+            return
+        self._marker_exits.append(
+            ExitEvent(kind, tick=end, cause=op.name,
+                      payload={"op_idx": idx, "start": start}))
+
+    def _stop_check(self) -> bool:
+        return bool(self._marker_exits)
+
+    def _do_checkpoint(self, requested_tick: int) -> ExitEvent:
+        self._ex.drain()
+        from repro.sim import serialize as ser
+        ckpt = ser.checkpoint_executor(self._ex)
+        self.last_checkpoint = ckpt
+        path = None
+        if self.checkpoint_dir:
+            path = os.path.join(self.checkpoint_dir,
+                                f"ckpt_tick{ckpt['tick']}.json")
+            ser.save_checkpoint(ckpt, path)
+            self.checkpoint_paths.append(path)
+        # resume == restore: rebuild the executor from the checkpoint we
+        # just took, so serialization is exercised on every checkpoint
+        self._ex = ser.restore_executor(ckpt, machine=self.board.machine,
+                                        **self._ex_cfg)
+        self._install_hook()
+        return ExitEvent(ExitEventType.CHECKPOINT, tick=requested_tick,
+                         cause="checkpoint",
+                         payload={"checkpoint": ckpt, "path": path,
+                                  "drained_tick": ckpt["tick"]})
+
+    def _ensure_started(self) -> None:
+        if not self._started:
+            self._ex.begin(self._trace)
+            self._install_hook()
+            self._started = True
+
+    # -- the exit-event loop ----------------------------------------------
+    def run(self) -> Iterator[ExitEvent]:
+        """Generator of :class:`ExitEvent`s; drive multi-phase
+        simulations by iterating (and scheduling further exits between
+        yields)."""
+        self._ensure_started()
+        stop = self._stop_check if self._has_markers else None
+        while True:
+            if self._marker_exits:
+                yield self._marker_exits.popleft()
+                continue
+            if self._ex.done():
+                if self._result is None:
+                    self._result = self._ex.result()
+                # makespan tick, not queue tick: a restored run's queues
+                # restart at 0 but the simulated time does not
+                yield ExitEvent(
+                    ExitEventType.DONE,
+                    tick=int(round(self._result.makespan_s * TICKS_PER_S)),
+                    cause="workload complete")
+                return
+            if self._scheduled:
+                tick, _, kind = self._scheduled[0]
+                finished = self._ex.advance(max_tick=tick, stop_check=stop)
+                if self._marker_exits:
+                    continue                 # scheduled exit stays queued
+                if finished:
+                    # workload ended before the exit point: drop it
+                    self._scheduled.pop(0)
+                    continue
+                self._scheduled.pop(0)
+                if kind is ExitEventType.CHECKPOINT:
+                    yield self._do_checkpoint(tick)
+                else:
+                    yield ExitEvent(kind, tick=tick, cause="max tick")
+            else:
+                finished = self._ex.advance(stop_check=stop)
+                if self._marker_exits:
+                    continue
+                if not finished:
+                    self._ex.result()        # raises the deadlock error
+        # not reached
+
+    def run_to_completion(self) -> ExecResult:
+        """Drain every exit event and return the final ExecResult."""
+        for _ in self.run():
+            pass
+        return self.result()
+
+    # -- results / checkpoint API ----------------------------------------
+    def save_checkpoint(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Checkpoint *now* (between ``run()`` yields, or before the
+        first — a tick-0 checkpoint of a never-run simulation is
+        valid): drain, serialize (to ``path`` if given), resume through
+        restore.  Returns the checkpoint dict."""
+        self._ensure_started()
+        ev = self._do_checkpoint(self._ex.now)
+        if path is not None:
+            from repro.sim import serialize as ser
+            ser.save_checkpoint(ev.payload["checkpoint"], path)
+            self.checkpoint_paths.append(path)
+        return ev.payload["checkpoint"]
+
+    def result(self) -> ExecResult:
+        if self._result is None:
+            raise RuntimeError("simulation has not completed; iterate "
+                               "run() until DONE (or run_to_completion())")
+        return self._result
+
+    @property
+    def tick(self) -> int:
+        return self._ex.now
+
+    @property
+    def sim_root(self):
+        """Root of the run's SimObject tree (stats live on it)."""
+        return self._ex.sim_root
+
+    @property
+    def machine(self) -> ClusterModel:
+        return self.board.machine

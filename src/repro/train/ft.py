@@ -49,21 +49,45 @@ class StragglerWatchdog:
 
 
 class Heartbeat:
+    """Liveness file.  Staleness is measured on the **monotonic** clock:
+    wall-clock (``time.time``) deltas go negative under NTP steps /
+    admin clock changes, which made a freshly-beating trainer look
+    either immortal (negative age) or dead (forward step) — exactly the
+    clock discipline problem 1000-node fleets hit in practice.
+    ``CLOCK_MONOTONIC`` is per-boot and system-wide, so ages are
+    comparable across processes on the same host (the controller and
+    the trainer); wall time is still recorded, but as informational
+    metadata only."""
+
     def __init__(self, path: str):
         self.path = path
 
     def beat(self, step: int) -> None:
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": step, "time": time.time()}, f)
+            json.dump({"step": step, "mono": time.monotonic(),
+                       "wall_time": time.time()}, f)
         os.replace(tmp, self.path)
 
     def age(self) -> Optional[float]:
         try:
             with open(self.path) as f:
-                return time.time() - json.load(f)["time"]
+                data = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
             return None
+        if "mono" in data:
+            delta = time.monotonic() - data["mono"]
+            if delta >= 0:
+                return delta
+            # a negative monotonic delta is impossible within one boot:
+            # the file predates a reboot (CLOCK_MONOTONIC restarted at
+            # 0), so the beat is at best wall-clock old — fall through
+        # legacy files, or pre-reboot files: wall clock, clamped so a
+        # backwards clock step cannot produce a negative age
+        legacy = data.get("time", data.get("wall_time"))
+        if legacy is None:
+            return None
+        return max(0.0, time.time() - legacy)
 
     def alive(self, max_age: float = 60.0) -> bool:
         age = self.age()

@@ -83,6 +83,30 @@ def test_heartbeat(tmp_path):
     assert hb.age() < 5
 
 
+def test_heartbeat_age_is_monotonic_and_survives_clock_steps(tmp_path):
+    import json
+    import time
+
+    hb = Heartbeat(os.path.join(str(tmp_path), "hb.json"))
+    # a beat recorded with a wall clock an hour in the future (the NTP
+    # step case) must still age on the monotonic clock, never negative
+    with open(hb.path, "w") as f:
+        json.dump({"step": 1, "mono": time.monotonic(),
+                   "wall_time": time.time() + 3600}, f)
+    assert 0 <= hb.age() < 5 and hb.alive(max_age=60)
+    # pre-reboot file: recorded mono exceeds current uptime (monotonic
+    # restarted at 0) — must NOT read as fresh; falls back to wall age
+    with open(hb.path, "w") as f:
+        json.dump({"step": 1, "mono": time.monotonic() + 1e6,
+                   "wall_time": time.time() - 7200}, f)
+    assert hb.age() == pytest.approx(7200, abs=60)
+    assert not hb.alive(max_age=60)
+    # legacy wall-clock-only files still work, clamped at zero
+    with open(hb.path, "w") as f:
+        json.dump({"step": 1, "time": time.time() + 999}, f)
+    assert hb.age() == 0.0
+
+
 @given(st.integers(1, 600))
 @settings(max_examples=40, deadline=None)
 def test_elastic_planner_properties(chips):

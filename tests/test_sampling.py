@@ -1,0 +1,91 @@
+"""Acceptance: SimPoint/SMARTS-style sampled simulation
+(repro.sim.sampling).  On a >=100-step steady-state trace, sampled mode
+executes <= 20% of ops at detailed fidelity yet predicts the total time
+of the full detailed run within 5%."""
+
+import pytest
+
+from repro.core.desim.trace import analytic_trace
+from repro.sim import (ExitEventType, SamplePlan, SampledSimulation,
+                       atomic_step_time_s, repeat_trace, sampled_run,
+                       v5e_multipod, v5e_pod)
+
+COLLS = [{"kind": "all-reduce", "bytes": 2e8, "participants": 256}]
+
+
+def _step(layers=4):
+    return analytic_trace("step", layers, 1e12, 1e9, COLLS)
+
+
+def test_sampled_acceptance_contract():
+    """The headline criterion: >=100 steps, <=20% detailed ops, <=5%
+    error vs the full contention-aware detailed run."""
+    step = _step()
+    num_steps = 120
+    board = v5e_pod()
+    full = board.executor().execute(repeat_trace(step, num_steps))
+
+    res = sampled_run(v5e_pod(), step, num_steps,
+                      SamplePlan(warmup=2, interval=12, window=2))
+    assert res.detailed_op_fraction <= 0.20
+    err = abs(res.predicted_total_s - full.makespan_s) / full.makespan_s
+    assert err <= 0.05
+    # and it genuinely fired far fewer engine events
+    assert res.events <= 0.25 * full.events
+
+
+def test_sampled_multipod_with_dcn():
+    tail = [{"kind": "all-reduce", "bytes": 1e9, "participants": 512,
+             "scope": "dcn"}]
+    step = analytic_trace("step", 4, 1e12, 1e9, COLLS,
+                          tail_collectives=tail)
+    num_steps = 100
+    full = v5e_multipod(2).executor().execute(repeat_trace(step, num_steps))
+    res = sampled_run(v5e_multipod(2), step, num_steps,
+                      SamplePlan(warmup=2, interval=20, window=2))
+    assert res.detailed_op_fraction <= 0.20
+    err = abs(res.predicted_total_s - full.makespan_s) / full.makespan_s
+    assert err <= 0.05
+
+
+def test_plan_segments_cover_the_run_exactly():
+    plan = SamplePlan(warmup=3, interval=10, window=2)
+    for n in (1, 3, 17, 100, 123):
+        segs = plan.segments(n)
+        assert sum(c for _, c in segs) == n
+        assert all(c > 0 for _, c in segs)
+    assert plan.detailed_fraction(100) <= 0.25
+    with pytest.raises(ValueError):
+        SamplePlan(interval=2, window=4)
+
+
+def test_sample_begin_exit_events_stream():
+    step = _step(layers=2)
+    sim = SampledSimulation(v5e_pod(), step, 50,
+                            SamplePlan(warmup=1, interval=10, window=1))
+    events = list(sim.run())
+    kinds = [e.kind for e in events]
+    n_windows = sum(1 for k, _ in sim.result().segments if k == "detailed")
+    assert kinds.count(ExitEventType.SAMPLE_BEGIN) == n_windows
+    assert kinds[-1] is ExitEventType.DONE
+    # sample windows report their step position
+    assert events[0].payload["step"] == 0
+
+
+def test_atomic_ff_mode_uses_roofline_estimate():
+    step = _step()
+    atomic = atomic_step_time_s(v5e_pod(), step)
+    assert atomic > 0
+    res = sampled_run(v5e_pod(), step, 40,
+                      SamplePlan(warmup=0, interval=20, window=2),
+                      ff_mode="atomic")
+    assert res.atomic_step_s == atomic
+    # prediction is still in the right ballpark (atomic ignores
+    # contention, so allow a loose band)
+    full = v5e_pod().executor().execute(repeat_trace(step, 40))
+    assert res.predicted_total_s == pytest.approx(full.makespan_s, rel=0.3)
+
+
+def test_sampling_rejects_bad_ff_mode():
+    with pytest.raises(ValueError, match="ff_mode"):
+        SampledSimulation(v5e_pod(), _step(), 10, ff_mode="psychic")

@@ -1,0 +1,273 @@
+"""Acceptance: gem5-style drain-then-serialize checkpointing
+(repro.sim.serialize).  Serialize mid-run at a quantum boundary,
+restore — same machine or re-parameterized — and the resumed run's
+final tick and stats tree are identical to an uninterrupted run."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.trace import analytic_trace
+from repro.sim import (CheckpointError, ExitEventType, Simulator,
+                       checkpoint_executor, load_checkpoint,
+                       machine_from_dict, restore_executor,
+                       save_checkpoint, v5e_multipod, v5e_pod)
+
+COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+TAIL = [{"kind": "all-reduce", "bytes": 1e9, "participants": 512,
+         "scope": "dcn"}]
+
+
+def _trace(layers=6, tail=True):
+    return analytic_trace("w", layers, 1e12, 1e9, COLLS,
+                          tail_collectives=TAIL if tail else ())
+
+
+def _reference(board, trace):
+    return board.executor(record_stats=True).execute(trace)
+
+
+# ---------------------------------------------------------------------------
+# identity: checkpoint/restore == uninterrupted (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pods", [1, 2])
+def test_checkpoint_restore_identity(pods):
+    board = v5e_pod() if pods == 1 else v5e_multipod(pods)
+    trace = _trace(tail=pods > 1)
+    ref = _reference(board, trace)
+
+    quantum = board.machine.quantum_ns
+    mid = int(ref.makespan_s * 1e9 * 0.4) // quantum * quantum
+    assert 0 < mid < ref.makespan_s * 1e9
+
+    # pause at the quantum boundary, drain, serialize
+    ex = board.executor(record_stats=True)
+    ex.begin(trace)
+    assert not ex.advance(max_tick=mid)
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    assert ckpt["tick"] >= mid        # drain may advance past the pause
+
+    # restore on an equivalent machine and run to completion
+    ex2 = restore_executor(ckpt, record_stats=True)
+    assert ex2.advance()
+    res = ex2.result()
+    assert res.makespan_s == ref.makespan_s          # identical final tick
+    assert res.stats == ref.stats                    # identical stats tree
+    assert res.compute_s == ref.compute_s
+    assert res.exposed_collective_s == ref.exposed_collective_s
+
+
+def test_checkpoint_json_file_round_trip(tmp_path):
+    board = v5e_multipod(2)
+    trace = _trace()
+    ref = _reference(board, trace)
+    quantum = board.machine.quantum_ns
+    mid = int(ref.makespan_s * 1e9 * 0.5) // quantum * quantum
+
+    ex = board.executor(record_stats=True)
+    ex.begin(trace)
+    ex.advance(max_tick=mid)
+    ex.drain()
+    path = save_checkpoint(checkpoint_executor(ex),
+                           os.path.join(str(tmp_path), "ckpt.json"))
+    # the file is one plain-JSON document
+    with open(path) as f:
+        assert json.load(f)["format"] == "repro.sim.checkpoint"
+    res = restore_executor(load_checkpoint(path), record_stats=True)
+    res.advance()
+    out = res.result()
+    assert out.makespan_s == ref.makespan_s
+    assert out.stats == ref.stats
+
+
+def test_simulator_checkpoint_exit_resumes_identically():
+    """Simulator's CHECKPOINT exit resumes *through the restore path*
+    and still finishes exactly like a run that never checkpointed."""
+    board = v5e_multipod(2)
+    trace = _trace()
+    ref = _reference(board, trace)
+    quantum = board.machine.quantum_ns
+    mid = int(ref.makespan_s * 1e9 * 0.3) // quantum * quantum
+
+    sim = Simulator(v5e_multipod(2), trace)
+    sim.schedule_checkpoint(mid)
+    kinds = [ev.kind for ev in sim.run()]
+    assert kinds == [ExitEventType.CHECKPOINT, ExitEventType.DONE]
+    assert sim.last_checkpoint is not None
+    assert sim.result().makespan_s == ref.makespan_s
+    assert sim.result().stats == ref.stats
+
+
+# ---------------------------------------------------------------------------
+# restore onto a re-parameterized machine (checkpoint once, sweep hardware)
+# ---------------------------------------------------------------------------
+
+def test_restore_onto_reparameterized_machine():
+    board = v5e_pod()
+    trace = _trace(layers=8, tail=False)
+    ref = _reference(board, trace)
+    mid = int(ref.makespan_s * 1e9 * 0.4)
+
+    ex = board.executor(record_stats=True)
+    ex.begin(trace)
+    ex.advance(max_tick=mid)
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+
+    # sweep hardware from the one checkpoint: faster chips finish the
+    # remaining work sooner, slower chips later; same-machine restore
+    # reproduces the reference exactly
+    results = {}
+    for mult in (0.5, 1.0, 2.0):
+        fast = v5e_pod(chip={"peak_flops": 197e12 * mult,
+                             "hbm_bw": 819e9 * mult})
+        ex2 = restore_executor(ckpt, machine=fast.machine)
+        ex2.advance()
+        results[mult] = ex2.result().makespan_s
+    assert results[1.0] == ref.makespan_s
+    assert results[2.0] < results[1.0] < results[0.5]
+    # completed pre-checkpoint work keeps its original timing, so even
+    # infinitely fast remaining hardware cannot beat the pause tick
+    assert results[2.0] * 1e9 >= mid
+
+
+def test_from_checkpoint_applies_explicit_board_run_knobs():
+    """An explicitly-passed board must win wholesale: its collective
+    algorithm and stragglers apply to the restored run, not the
+    checkpointed ones (a board-based DSE re-sweep over algorithms must
+    not silently produce identical numbers)."""
+    board = v5e_pod()
+    trace = _trace(layers=8, tail=False)
+    ref = _reference(board, trace)
+    ex = board.executor()
+    ex.begin(trace)
+    ex.advance(max_tick=int(ref.makespan_s * 1e9 * 0.3))
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+
+    ring = Simulator.from_checkpoint(ckpt, board=v5e_pod(algorithm="ring"))
+    assert ring._ex.algorithm == "ring"
+    torus = Simulator.from_checkpoint(ckpt)
+    assert torus._ex.algorithm == "torus2d"
+    t_ring = ring.run_to_completion().makespan_s
+    t_torus = torus.run_to_completion().makespan_s
+    assert t_torus == ref.makespan_s
+    assert t_ring != t_torus          # the algorithm actually applied
+
+
+def test_save_checkpoint_before_first_run_iteration():
+    """Checkpointing a never-run Simulator is a valid tick-0 snapshot
+    (the run implicitly begins), and the run still completes exactly."""
+    trace = _trace(layers=4, tail=False)
+    ref = _reference(v5e_pod(), trace)
+    sim = Simulator(v5e_pod(), trace)
+    ckpt = sim.save_checkpoint()
+    assert ckpt["tick"] >= 0
+    assert sim.run_to_completion().makespan_s == ref.makespan_s
+    # and the tick-0 checkpoint restores to a full identical run
+    sim2 = Simulator.from_checkpoint(ckpt)
+    assert sim2.run_to_completion().makespan_s == ref.makespan_s
+
+
+def test_restored_events_accounting_is_continuous():
+    """ExecResult.events carries across a checkpoint: pre-pause firings
+    are restored, so a resumed run reports at least the uninterrupted
+    count (plus one re-issue event per deferred op)."""
+    board = v5e_pod()
+    trace = _trace(layers=8, tail=False)
+    ref = _reference(board, trace)
+    ex = board.executor()
+    ex.begin(trace)
+    ex.advance(max_tick=int(ref.makespan_s * 1e9 * 0.5))
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    n_deferred = len(ckpt["state"]["deferred"])
+    ex2 = restore_executor(ckpt)
+    ex2.advance()
+    assert ex2.result().events == ref.events + n_deferred
+
+
+def test_simulator_from_checkpoint_file(tmp_path):
+    board = v5e_pod()
+    trace = _trace(layers=6, tail=False)
+    ref = _reference(board, trace)
+    sim = Simulator(v5e_pod(), trace, checkpoint_dir=str(tmp_path))
+    sim.schedule_checkpoint(int(ref.makespan_s * 1e9 * 0.5))
+    for _ in sim.run():
+        pass
+    assert sim.checkpoint_paths and os.path.exists(sim.checkpoint_paths[0])
+    sim2 = Simulator.from_checkpoint(sim.checkpoint_paths[0])
+    assert sim2.run_to_completion().makespan_s == ref.makespan_s
+
+
+# ---------------------------------------------------------------------------
+# machine description + guard rails
+# ---------------------------------------------------------------------------
+
+def test_machine_round_trip_through_dict():
+    board = v5e_multipod(3, chip={"hbm_bw": 1e12}, ici={"bw": 75e9})
+    m2 = machine_from_dict(board.machine.serialize())
+    assert m2.num_pods == 3
+    assert m2.pod.chip.hbm_bw == 1e12
+    assert m2.pod.ici.bw == 75e9
+    assert m2.pod.nx == board.machine.pod.nx
+
+
+def test_snapshot_requires_drain():
+    ex = v5e_pod().executor()
+    ex.begin(_trace(tail=False))
+    with pytest.raises(RuntimeError, match="drain"):
+        ex.snapshot()
+
+
+def test_restore_rejects_pod_count_mismatch():
+    board = v5e_multipod(2)
+    trace = _trace()
+    ex = board.executor()
+    ex.begin(trace)
+    ex.advance(max_tick=board.machine.quantum_ns)
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    with pytest.raises(ValueError, match="pod"):
+        restore_executor(ckpt, machine=v5e_multipod(4).machine)
+
+
+def test_checkpoint_version_check():
+    board = v5e_pod()
+    ex = board.executor()
+    ex.begin(_trace(tail=False))
+    ex.advance(max_tick=1000)
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    bad = dict(ckpt, version=999)
+    with pytest.raises(CheckpointError, match="version"):
+        restore_executor(bad)
+    with pytest.raises(CheckpointError, match="format"):
+        restore_executor({"format": "something-else"})
+
+
+def test_drained_executor_snapshot_roundtrips_partial_rendezvous():
+    """Checkpoint with a cross-pod collective mid-rendezvous (one pod
+    arrived, the straggler pod not yet): restore completes it."""
+    board = v5e_multipod(2)
+    trace = analytic_trace("w", 4, 1e12, 1e9, COLLS,
+                           tail_collectives=TAIL)
+    ref = board.executor(straggler_slowdowns=[1.0, 3.0],
+                         record_stats=True).execute(trace)
+    # pause while the fast pod waits on the dcn rendezvous
+    quantum = board.machine.quantum_ns
+    mid = int(ref.makespan_s * 1e9 * 0.6) // quantum * quantum
+    ex = board.executor(straggler_slowdowns=[1.0, 3.0], record_stats=True)
+    ex.begin(trace)
+    ex.advance(max_tick=mid)
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    ex2 = restore_executor(ckpt, record_stats=True)
+    ex2.advance()
+    out = ex2.result()
+    assert out.makespan_s == ref.makespan_s
+    assert out.stats == ref.stats

@@ -1,0 +1,183 @@
+"""repro.sim.Simulator: boards, the exit-event loop, work markers, and
+equivalence with the raw TraceExecutor path (the gem5-stdlib front-end
+must not change timing, only packaging)."""
+
+import pytest
+
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.trace import HloTrace, TraceOp, analytic_trace
+from repro.sim import (BOARDS, ExitEventType, Simulator,
+                       SteadyStateWorkload, get_board, repeat_trace,
+                       v5e_degraded, v5e_multipod, v5e_pod, v5e_straggler)
+
+COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+
+
+def _trace(layers=6):
+    return analytic_trace("w", layers, 1e12, 1e9, COLLS)
+
+
+# ---------------------------------------------------------------------------
+# boards
+# ---------------------------------------------------------------------------
+
+def test_board_catalog_builds_instantiated_machines():
+    for name in BOARDS:
+        b = get_board(name)
+        assert b.machine._frozen, name
+    assert v5e_pod().machine.pod.num_chips == 256
+    assert v5e_multipod(4).machine.num_pods == 4
+
+
+def test_board_overrides_apply_before_freeze():
+    b = v5e_pod(nx=8, ny=4, chip={"hbm_bw": 1e12}, ici={"bw": 100e9})
+    assert b.machine.pod.num_chips == 32
+    assert b.machine.pod.chip.hbm_bw == 1e12
+    assert b.machine.pod.ici.bw == 100e9
+
+
+def test_straggler_and_degraded_boards_are_slower():
+    tr = _trace()
+    base = v5e_pod().executor().execute(tr).makespan_s
+    degraded = v5e_degraded(hbm_frac=0.5, ici_frac=0.5)
+    assert degraded.executor().execute(tr).makespan_s > base
+    strag = v5e_straggler(num_pods=2, slowdown=3.0)
+    nominal = v5e_multipod(2).executor().execute(tr).makespan_s
+    assert strag.executor().execute(tr).makespan_s > nominal
+
+
+# ---------------------------------------------------------------------------
+# Simulator equivalence + exit events
+# ---------------------------------------------------------------------------
+
+def test_simulator_matches_raw_executor():
+    tr = _trace()
+    board = v5e_pod()
+    ref = TraceExecutor(board.machine, record_stats=True).execute(tr)
+    sim = Simulator(v5e_pod(), tr)
+    res = sim.run_to_completion()
+    assert res.makespan_s == ref.makespan_s
+    assert res.stats == ref.stats
+    assert sim.tick == int(round(ref.makespan_s * 1e9))
+
+
+def test_exit_event_sequence_max_tick_then_done():
+    tr = _trace()
+    ref = v5e_pod().executor().execute(tr)
+    sim = Simulator(v5e_pod(), tr)
+    mid = int(ref.makespan_s * 1e9 // 2)
+    sim.schedule_max_tick(mid)
+    events = list(sim.run())
+    assert [e.kind for e in events] == [ExitEventType.MAX_TICK,
+                                        ExitEventType.DONE]
+    assert events[0].tick == mid
+    assert sim.result().makespan_s == ref.makespan_s
+
+
+def test_multi_phase_scripting_between_yields():
+    """Drivers schedule further exits while iterating — the gem5-stdlib
+    'script your simulation in plain Python' loop."""
+    tr = _trace(layers=10)
+    ref = v5e_pod().executor().execute(tr)
+    end = int(ref.makespan_s * 1e9)
+    sim = Simulator(v5e_pod(), tr)
+    sim.schedule_max_tick(end // 4)
+    seen = []
+    for ev in sim.run():
+        seen.append(ev)
+        if ev.kind is ExitEventType.MAX_TICK and len(seen) == 1:
+            sim.schedule_max_tick(end // 2)       # phase 2, mid-flight
+    kinds = [e.kind for e in seen]
+    assert kinds == [ExitEventType.MAX_TICK, ExitEventType.MAX_TICK,
+                     ExitEventType.DONE]
+    assert seen[0].tick == end // 4 and seen[1].tick == end // 2
+    assert sim.result().makespan_s == ref.makespan_s
+
+
+def test_stale_scheduled_exit_is_dropped():
+    tr = _trace(layers=2)
+    ref = v5e_pod().executor().execute(tr)
+    sim = Simulator(v5e_pod(), tr)
+    sim.schedule_max_tick(int(ref.makespan_s * 1e9 * 10))  # beyond the end
+    assert [e.kind for e in sim.run()] == [ExitEventType.DONE]
+
+
+def test_result_before_done_raises():
+    sim = Simulator(v5e_pod(), _trace())
+    with pytest.raises(RuntimeError, match="not completed"):
+        sim.result()
+
+
+# ---------------------------------------------------------------------------
+# work markers (gem5 work items)
+# ---------------------------------------------------------------------------
+
+def _marker_trace():
+    t = HloTrace("roi")
+    t.ops.append(TraceOp(kind="compute", flops=1e12, bytes=1e9,
+                         name="warmup"))
+    t.ops.append(TraceOp(kind="compute", flops=1e9, bytes=1e6, deps=(0,),
+                         name="work_begin_roi"))
+    t.ops.append(TraceOp(kind="compute", flops=1e12, bytes=1e9, deps=(1,),
+                         name="roi_body"))
+    t.ops.append(TraceOp(kind="compute", flops=1e9, bytes=1e6, deps=(2,),
+                         name="work_end_roi"))
+    t.ops.append(TraceOp(kind="compute", flops=1e12, bytes=1e9, deps=(3,),
+                         name="cooldown"))
+    return t
+
+
+def test_work_begin_end_exit_events():
+    sim = Simulator(v5e_pod(), _marker_trace())
+    events = list(sim.run())
+    kinds = [e.kind for e in events]
+    assert kinds == [ExitEventType.WORK_BEGIN, ExitEventType.WORK_END,
+                     ExitEventType.DONE]
+    begin, end = events[0], events[1]
+    assert begin.cause == "work_begin_roi" and end.cause == "work_end_roi"
+    assert 0 < begin.tick < end.tick <= sim.tick
+    # the ROI is measurable from the exits alone
+    assert (end.tick - begin.tick) * 1e-9 < sim.result().makespan_s
+
+
+def test_work_markers_survive_checkpoint():
+    tr = _marker_trace()
+    sim = Simulator(v5e_pod(), tr)
+    ref_kinds = [e.kind for e in sim.run()]
+    sim2 = Simulator(v5e_pod(), tr)
+    sim2.schedule_checkpoint(1000)    # before the ROI
+    kinds = [e.kind for e in sim2.run()]
+    assert kinds == [ExitEventType.CHECKPOINT] + ref_kinds
+    assert sim2.result().makespan_s == sim.result().makespan_s
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+def test_repeat_trace_chains_steps():
+    step = _trace(layers=2)
+    tr3 = repeat_trace(step, 3)
+    assert len(tr3.ops) == 3 * len(step.ops)
+    # step 1's root depends on step 0's sink
+    n = len(step.ops)
+    root_of_step1 = tr3.ops[n]
+    assert root_of_step1.deps == (n - 1,)
+    # steady state: makespan of k steps == k * one-step makespan
+    board = v5e_pod()
+    one = board.executor().execute(step).makespan_s
+    three = board.executor().execute(tr3).makespan_s
+    assert three == pytest.approx(3 * one, rel=1e-9)
+
+
+def test_steady_state_workload_in_simulator():
+    step = _trace(layers=2)
+    wl = SteadyStateWorkload(step, 4)
+    res = Simulator(v5e_pod(), wl).run_to_completion()
+    one = v5e_pod().executor().execute(step).makespan_s
+    assert res.makespan_s == pytest.approx(4 * one, rel=1e-9)
+
+
+def test_repeat_trace_rejects_zero_steps():
+    with pytest.raises(ValueError):
+        repeat_trace(_trace(), 0)

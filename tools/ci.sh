@@ -6,9 +6,20 @@
 #   tools/ci.sh              # fast subset (default: -m "not slow")
 #   CI_MARKER="" tools/ci.sh # everything
 #   tools/ci.sh -k executor  # extra pytest args pass through
+#   tools/ci.sh smoke        # example + benchmark bit-rot tier: runs
+#                            # examples/quickstart.py and
+#                            # `python -m benchmarks.run --json fidelity`
+#                            # (writes BENCH_desim.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "${1-}" = "smoke" ]; then
+  shift
+  python examples/quickstart.py
+  python -m benchmarks.run --json fidelity
+  echo "smoke tier OK"
+  exit 0
+fi
 MARKER=${CI_MARKER-"not slow"}
 if [ -n "$MARKER" ]; then
   exec python -m pytest -q -m "$MARKER" "$@"
