@@ -22,7 +22,8 @@ import traceback
 
 from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
                         distgem5_scaling, elastic_trace, fidelity_spectrum,
-                        kernel_throughput, roofline, sampled_sim)
+                        kernel_throughput, roofline, sampled_sim,
+                        serving_sweep)
 from benchmarks.common import rows_as_dict
 
 BENCHES = [
@@ -32,6 +33,7 @@ BENCHES = [
     ("distgem5_scaling", distgem5_scaling.run),
     ("checkpoint_fork", checkpoint_fork.run),
     ("sampled_sim", sampled_sim.run),
+    ("serving_sweep", serving_sweep.run),
     ("kernel_throughput", kernel_throughput.run),
     ("dse_sweep", dse_sweep.run),
     ("roofline", roofline.run),

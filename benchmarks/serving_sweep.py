@@ -1,0 +1,71 @@
+"""Serving DSE sweep: slots x arrival rate x board -> goodput/SLO
+frontier (the dynamic-workload counterpart of dse_sweep).
+
+The gem5 use case applied to serving capacity planning: for each board
+(a healthy serving slice and a degraded one) sweep KV-slot counts and
+open-loop Poisson arrival rates, and read off the goodput/SLO frontier
+— the highest load each configuration sustains before TTFT/latency
+SLOs start failing.  Every cell replays the *same seeded request
+stream* per rate, so rows are reproducible and comparable across
+boards.
+
+Emits one row per cell:
+  serving_sweep/<board>/s<slots>/r<rate> , wall_us , goodput/p99-ttft/...
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.sim import (ServeSim, ServingCost, Simulator, poisson_requests,
+                       v5e_degraded, v5e_serving)
+
+SEED = 20
+NUM_REQUESTS = 80
+SLOTS = (4, 16)
+RATES_RPS = (50.0, 200.0, 800.0)
+SLO_TTFT_S = 0.05
+SLO_LATENCY_S = 2.0
+
+# a 70B-class model sharded over whatever the board offers
+MODEL = dict(num_params=70e9, layers=80, d_model=8192)
+
+
+def _boards():
+    # >= 2 boards: a healthy 8x8 serving slice and a degraded full pod
+    # (half HBM / half ICI) — the capacity-planning comparison
+    return [("v5e_serving", lambda: v5e_serving(8, 8)),
+            ("v5e_degraded", lambda: v5e_degraded(0.5, 0.5))]
+
+
+def run() -> None:
+    for bname, mk in _boards():
+        for slots in SLOTS:
+            for rate in RATES_RPS:
+                board = mk()
+                cost = ServingCost.from_params(
+                    chips=board.machine.num_chips, **MODEL)
+                reqs = poisson_requests(
+                    NUM_REQUESTS, rate, seed=SEED,
+                    prompt_len=(64, 512), decode_len=(16, 64))
+                srv = ServeSim(cost=cost, requests=reqs, slots=slots,
+                               seq_capacity=1024, slo_ttft_s=SLO_TTFT_S,
+                               slo_latency_s=SLO_LATENCY_S)
+                sim = Simulator(board, srv)
+                t0 = time.perf_counter()
+                sim.run_to_completion()
+                wall_us = (time.perf_counter() - t0) * 1e6
+                s = srv.summary()
+                emit(f"serving_sweep/{bname}/s{slots}/r{int(rate)}",
+                     wall_us,
+                     f"goodput={s['goodput_rps']:.1f}rps "
+                     f"thru={s['throughput_rps']:.1f}rps "
+                     f"viol={int(s['slo_violations'])} "
+                     f"p99_ttft={s['p99_ttft_s'] * 1e3:.2f}ms "
+                     f"p99_lat={s['p99_latency_s'] * 1e3:.1f}ms "
+                     f"batch={s['mean_batch']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -36,6 +36,12 @@ are deferred instead of issued), snapshotted to a plain dict, and
 ``TraceExecutor.restore``.  The ``repro.sim`` front-end builds the
 checkpoint file format and the exit-event loop on top of these hooks.
 
+The trace is **not frozen**: ``inject_op`` appends ops to a live run
+(dynamic workloads — gem5's "full application" mode, used by
+``repro.sim.workloads.ServeSim`` for request-level serving).  Injected
+ops execute on one pod, report completion through ``injection_hook``,
+and ride the same drain/snapshot/restore path as static ops.
+
 Pass ``record_stats=True`` to get the gem5-style statistics tree of the
 run in ``ExecResult.stats`` (flat ``sim.chip0.ops_executed`` keys; the
 full tree object is on ``TraceExecutor.sim_root`` after ``execute``).
@@ -79,6 +85,10 @@ class ExecResult:
 
 # hook invoked on pod-0 op completion: (op, op_idx, start, end) -> None
 OpHook = Callable[[TraceOp, int, int, int], None]
+
+# hook invoked when an *injected* op completes on its owning pod:
+# (op, op_idx, pod, start, end) -> None
+InjectionHook = Callable[[TraceOp, int, int, int, int], None]
 
 
 class TraceExecutor:
@@ -124,6 +134,7 @@ class TraceExecutor:
             self.slow.append(1.0)
         self.sim_root: Optional[ClusterSim] = None
         self.op_hook: Optional[OpHook] = None
+        self.injection_hook: Optional[InjectionHook] = None
         self._trace: Optional[HloTrace] = None
 
     # ------------------------------------------------------------------
@@ -187,6 +198,14 @@ class TraceExecutor:
         self._timeline: List[Dict] = []
         self._draining = False
         self._deferred: List[Tuple[int, int, int]] = []
+        # dynamically injected ops: op_idx -> owning pod.  An injected op
+        # runs on ONE pod only (the trace stops being SPMD there); the
+        # other pods' rows are marked complete at injection time so the
+        # done()/dependents bookkeeping stays uniform.
+        self._injected: Dict[int, int] = {}
+        # op_idx -> requested ready floor, for injected ops still
+        # waiting on deps at injection time
+        self._inject_floor: Dict[int, int] = {}
 
     def begin(self, trace: HloTrace) -> "TraceExecutor":
         """Build the SimObject tree and issue the trace's root ops.
@@ -198,6 +217,63 @@ class TraceExecutor:
                 if not op.deps:
                     self._issue(p, idx, 0)
         return self
+
+    # -- dynamic workloads: op injection into a live run ------------------
+    def inject_op(self, op: TraceOp, ready: int, pod: int = 0) -> int:
+        """Append ``op`` to the live trace and issue it on ``pod`` at tick
+        >= ``ready`` (dynamic workloads: ops generated in *response to*
+        events, not frozen up front — the gem5 'full application' mode).
+
+        Unlike the static trace, an injected op executes on exactly one
+        pod; its deps may reference any earlier op (static or injected)
+        but must resolve on the owning pod.  Completion is reported
+        through :attr:`injection_hook` as ``(op, idx, pod, start, end)``.
+        Injection while draining defers the issue like any newly-ready
+        op, so checkpoints taken mid-serving restore exactly.
+        Returns the op's trace index.
+        """
+        if self._trace is None:
+            raise RuntimeError("inject_op() before begin()/restore()")
+        pods = self.machine.num_pods
+        if not 0 <= pod < pods:
+            raise ValueError(f"pod {pod} out of range (machine has {pods})")
+        if self._routes_dcn(op):
+            raise ValueError(
+                f"cannot inject dcn-routed op {op.name or op.kind!r}: it "
+                "would rendezvous on pods that never issue it (injected "
+                "ops run on exactly one pod)")
+        idx = len(self._trace.ops)
+        for d in op.deps:
+            if not 0 <= d < idx:
+                raise ValueError(f"injected op dep {d} out of range")
+            owner = self._injected.get(d)
+            if owner is not None and owner != pod:
+                raise ValueError(
+                    f"injected op dep {d} belongs to pod {owner}, not {pod}")
+        self._trace.ops.append(op)
+        self._dependents.append([])
+        for d in op.deps:
+            self._dependents[d].append(idx)
+        rem = sum(1 for d in op.deps if self._op_end[pod][d] < 0)
+        ready = int(ready)
+        for p in range(pods):
+            self._op_end[p].append(-1)
+            self._remaining[p].append(rem)
+        self._injected[idx] = pod
+        for p in range(pods):
+            if p != pod:
+                # non-owning pods never run the op: mark complete now
+                self._op_end[p][idx] = ready
+                self._ncomplete += 1
+        if rem == 0:
+            at = max([ready] + [self._op_end[pod][d] for d in op.deps])
+            self._issue(pod, idx, at)
+        else:
+            # deps still in flight: remember the requested floor so the
+            # dependent-issue path honors ``ready`` (dep end ticks alone
+            # could issue the op earlier than asked)
+            self._inject_floor[idx] = ready
+        return idx
 
     # -- issue / completion ---------------------------------------------
     def _payload(self, p: int, idx: int, ready: int) -> dict:
@@ -233,7 +309,17 @@ class TraceExecutor:
         if self._op_end[p][idx] < 0:
             self._ncomplete += 1
         self._op_end[p][idx] = end
-        if p == 0:
+        # snapshot the dependent list BEFORE any hook runs: a hook may
+        # inject_op() a new op depending on this one, which appends to
+        # _dependents[idx] — but inject_op already saw op_end >= 0 and
+        # excluded this op from the new op's remaining count, so
+        # processing the appended entry here would double-decrement
+        dependents = list(self._dependents[idx])
+        # totals/timeline count each op once: on pod 0 for static SPMD
+        # ops (every pod runs a replica), on the owning pod for
+        # injected ops (they run exactly once)
+        owner = self._injected.get(idx)
+        if p == (0 if owner is None else owner):
             dur = payload.get("dur")
             dur_s = (dur if dur is not None else end - start) \
                 / TICKS_PER_S
@@ -253,13 +339,25 @@ class TraceExecutor:
                                        "kind": op.kind,
                                        "start": start / TICKS_PER_S,
                                        "end": end / TICKS_PER_S})
-            if self.op_hook is not None:
+            if self.op_hook is not None and owner is None:
+                # work-item markers are a static-trace concept; injected
+                # ops report through injection_hook below
                 self.op_hook(op, idx, start, end)
-        for dep_idx in self._dependents[idx]:
+        if owner is not None and self.injection_hook is not None \
+                and p == owner:
+            self.injection_hook(op, idx, p, start, end)
+        for dep_idx in dependents:
+            if self._op_end[p][dep_idx] >= 0:
+                # injected op owned by another pod: this pod's row was
+                # marked complete at injection time — nothing to issue
+                continue
             self._remaining[p][dep_idx] -= 1
             if self._remaining[p][dep_idx] == 0:
                 ready = max(self._op_end[p][d]
                             for d in self._trace.ops[dep_idx].deps)
+                floor = self._inject_floor.pop(dep_idx, None)
+                if floor is not None:
+                    ready = max(ready, floor)
                 self._issue(p, dep_idx, ready)
 
     # -- lifecycle: advance ----------------------------------------------
@@ -355,6 +453,10 @@ class TraceExecutor:
             "queues": [q.snapshot() for q in self._queues],
             "op_end": [list(row) for row in self._op_end],
             "deferred": [list(t) for t in self._deferred],
+            "injected": sorted([idx, pod]
+                               for idx, pod in self._injected.items()),
+            "inject_floor": sorted([idx, f] for idx, f
+                                   in self._inject_floor.items()),
             "rendezvous": rendezvous,
             "chip_free": [c.free_tick for c in self._chips],
             "wires": wires,
@@ -387,6 +489,10 @@ class TraceExecutor:
                 "not the pod count)")
         self._setup(trace)
         nops = len(trace.ops)
+        self._injected = {int(idx): int(p)
+                          for idx, p in state.get("injected", [])}
+        self._inject_floor = {int(idx): int(f)
+                              for idx, f in state.get("inject_floor", [])}
         self._op_end = [[int(e) for e in row] for row in state["op_end"]]
         self._ncomplete = sum(1 for row in self._op_end
                               for e in row if e >= 0)

@@ -33,15 +33,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 0.5, "u4": 0.5,
-    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
-}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+from repro.core.desim.dtypes import SHAPE_RE as _SHAPE_RE
+from repro.core.desim.dtypes import shape_elems_bytes  # noqa: F401 (re-export)
 
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
                     "all-to-all", "collective-permute")
@@ -60,24 +53,6 @@ _ELEMENTWISE_1FLOP = {
     "shift-right-arithmetic", "exponential-minus-one", "log-plus-one",
     "logistic", "cbrt", "erf",
 }
-
-
-def shape_elems_bytes(type_str: str) -> Tuple[float, float]:
-    """(elements, bytes) totals over all tensors in an HLO type string."""
-    elems = 0.0
-    nbytes = 0.0
-    for m in _SHAPE_RE.finditer(type_str):
-        dtype, dims = m.groups()
-        per = _DTYPE_BYTES.get(dtype)
-        if per is None:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        elems += n
-        nbytes += n * per
-    return elems, nbytes
 
 
 def _shape_dims(type_str: str) -> List[int]:

@@ -26,21 +26,11 @@ import re
 from dataclasses import dataclass, field, asdict
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.core.desim.dtypes import shape_bytes  # noqa: F401 (re-export)
+
 # ---------------------------------------------------------------------------
 # HLO text parsing
 # ---------------------------------------------------------------------------
-
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 0.5, "u4": 0.5,
-    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16,
-    "token": 0, "opaque": 0,
-}
-
-# one tensor type, e.g. ``bf16[256,4096]{1,0}`` or ``f32[]``
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 # an HLO instruction line:  ``  %name = <ret-type(s)> opcode(...), attrs``
 _INSTR_RE = re.compile(
@@ -53,22 +43,6 @@ COLLECTIVE_OPS = (
 )
 # async forms: all-gather-start, all-reduce-start, collective-permute-start...
 _COLLECTIVE_PREFIXES = tuple(COLLECTIVE_OPS)
-
-
-def shape_bytes(type_str: str) -> float:
-    """Total bytes of one or a tuple of tensor types in HLO syntax."""
-    total = 0.0
-    for m in _SHAPE_RE.finditer(type_str):
-        dtype, dims = m.groups()
-        nbytes = _DTYPE_BYTES.get(dtype)
-        if nbytes is None:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * nbytes
-    return total
 
 
 def _base_collective(opcode: str) -> Optional[str]:

@@ -155,16 +155,134 @@ class Distribution(Stat):
 
     def state_dict(self) -> Dict[str, Any]:
         # Welford accumulators, so a restored run keeps streaming into
-        # the same distribution (mean/m2 continue exactly)
+        # the same distribution (mean/m2 continue exactly).  min/max of
+        # an empty distribution are +-inf sentinels, which are not
+        # RFC 8259 JSON — store None instead so checkpoint files stay
+        # strictly parseable everywhere.
         return {"count": self._count, "mean": self._mean, "m2": self._m2,
-                "min": self._min, "max": self._max}
+                "min": self._min if self._count else None,
+                "max": self._max if self._count else None}
 
     def load_state_dict(self, d: Dict[str, Any]) -> None:
         self._count = int(d["count"])
         self._mean = float(d["mean"])
         self._m2 = float(d["m2"])
-        self._min = float(d["min"])
-        self._max = float(d["max"])
+        self._min = float("inf") if d["min"] is None else float(d["min"])
+        self._max = float("-inf") if d["max"] is None else float(d["max"])
+
+
+class Percentiles(Stat):
+    """Streaming quantile sketch (bounded-memory, serializable).
+
+    DDSketch-style logarithmic binning: a sample ``v > 0`` lands in bin
+    ``ceil(log_gamma(v))`` with ``gamma = (1 + rel_err)/(1 - rel_err)``,
+    which guarantees every reported quantile is within ``rel_err``
+    *relative* error of the exact sample quantile — the right error
+    model for latency tails, where p99 may be 100x p50 and a fixed
+    absolute-bin histogram would need millions of buckets.
+
+    The accumulator state (sparse bin counts + count/sum/min/max) is a
+    plain dict, so ``state_dict``/``load_state_dict`` round-trips through
+    JSON checkpoints and a restored run keeps streaming into the same
+    sketch bit-identically (the serving checkpoint test enforces this).
+    Non-positive samples are clamped into a dedicated zero bin (serving
+    metrics are non-negative; a 0.0 TTFT is representable).
+    """
+
+    kind = "percentiles"
+
+    def __init__(self, name: str, desc: str = "", unit: str = "",
+                 rel_err: float = 0.01):
+        super().__init__(name, desc, unit)
+        if not 0.0 < rel_err < 1.0:
+            raise ValueError(f"rel_err must be in (0, 1), got {rel_err}")
+        self.rel_err = rel_err
+        self._gamma = (1.0 + rel_err) / (1.0 - rel_err)
+        self._log_gamma = math.log(self._gamma)
+        self.reset()
+
+    # -- accumulation ---------------------------------------------------
+    def _key(self, v: float) -> int:
+        return int(math.ceil(math.log(v) / self._log_gamma))
+
+    def sample(self, v: float, n: int = 1) -> None:
+        # clamp applies to ALL accumulators (sum/min/max too), so the
+        # reported mean/min never drop below every quantile
+        v = max(float(v), 0.0)
+        if v == 0.0:
+            self._zero += n
+        else:
+            k = self._key(v)
+            self._bins[k] = self._bins.get(k, 0) + n
+        self._count += n
+        self._sum += v * n
+        self._min = min(self._min, v)
+        self._max = max(self._max, v)
+
+    # -- queries --------------------------------------------------------
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Value at quantile ``q`` in [0, 1], within ``rel_err`` relative
+        error of the exact sample quantile (0.0 on an empty sketch)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        if self._count == 0:
+            return 0.0
+        rank = q * (self._count - 1)
+        seen = self._zero
+        if rank < seen:
+            return 0.0
+        for k in sorted(self._bins):
+            seen += self._bins[k]
+            if rank < seen:
+                # midpoint of the bin (gamma^(k-1), gamma^k]
+                return (2.0 * self._gamma ** k) / (self._gamma + 1.0)
+        return self._max
+
+    def value(self) -> Dict[str, float]:
+        return {"count": self._count, "mean": self.mean,
+                "min": self._min if self._count else 0.0,
+                "max": self._max if self._count else 0.0,
+                "p50": self.quantile(0.50), "p90": self.quantile(0.90),
+                "p95": self.quantile(0.95), "p99": self.quantile(0.99)}
+
+    def reset(self) -> None:
+        self._bins: Dict[int, int] = {}
+        self._zero = 0
+        self._count = 0
+        self._sum = 0.0
+        self._min = float("inf")
+        self._max = float("-inf")
+
+    # -- checkpointing (repro.sim.serialize) ----------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        # JSON object keys must be strings; bin keys are ints.  min/max
+        # of an empty sketch are +-inf sentinels — stored as None to
+        # keep checkpoint JSON strictly RFC 8259 (no Infinity literals).
+        return {"rel_err": self.rel_err,
+                "bins": {str(k): n for k, n in self._bins.items()},
+                "zero": self._zero, "count": self._count, "sum": self._sum,
+                "min": self._min if self._count else None,
+                "max": self._max if self._count else None}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        if float(d["rel_err"]) != self.rel_err:
+            raise ValueError(
+                f"percentiles {self.name}: rel_err mismatch "
+                f"{d['rel_err']} != {self.rel_err} (bins not comparable)")
+        self._bins = {int(k): int(n) for k, n in d["bins"].items()}
+        self._zero = int(d["zero"])
+        self._count = int(d["count"])
+        self._sum = float(d["sum"])
+        self._min = float("inf") if d["min"] is None else float(d["min"])
+        self._max = float("-inf") if d["max"] is None else float(d["max"])
 
 
 class Formula(Stat):
@@ -206,6 +324,10 @@ class StatGroup:
     def distribution(self, name: str, desc: str = "",
                      unit: str = "") -> Distribution:
         return self._add(Distribution(name, desc, unit))
+
+    def percentiles(self, name: str, desc: str = "", unit: str = "",
+                    rel_err: float = 0.01) -> Percentiles:
+        return self._add(Percentiles(name, desc, unit, rel_err=rel_err))
 
     def formula(self, name: str, fn: Callable[[], float], desc: str = "",
                 unit: str = "") -> Formula:

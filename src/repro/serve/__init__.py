@@ -1,2 +1,31 @@
-from repro.serve.step import build_prefill_step, build_decode_step  # noqa: F401
-from repro.serve.server import BatchServer, Request  # noqa: F401
+"""Serving: the real continuous-batching server and its pure policy.
+
+The policy module is deliberately jax-free — the DES
+(``repro.sim.workloads``) imports it, and the simulator stack must
+stay importable (and fast to import) without jax.  The server/step
+modules *do* import jax, so they load lazily (PEP 562) on first
+attribute access instead of at package import.
+"""
+
+from repro.serve.policy import Decision, SlotScheduler  # noqa: F401 (pure)
+
+_LAZY = {
+    "BatchServer": "repro.serve.server",
+    "Request": "repro.serve.server",
+    "build_prefill_step": "repro.serve.step",
+    "build_decode_step": "repro.serve.step",
+}
+
+__all__ = ["Decision", "SlotScheduler", *sorted(_LAZY)]
+
+
+def __getattr__(name):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

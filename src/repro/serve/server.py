@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.simobject import Param, SimObject
 from repro.models.api import Model
+from repro.serve.policy import SlotScheduler
 from repro.serve.step import build_decode_step, build_prefill_step
 
 
@@ -61,15 +62,30 @@ class BatchServer(SimObject):
 
     # ------------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Request]:
+        """Serve ``requests`` to completion.
+
+        All scheduling (admission order, slot assignment, finish
+        detection) is delegated to the pure :class:`SlotScheduler`
+        policy — the same object the DES ``ServeSim`` drives at pod
+        scale — and the decision log of the run is left on
+        ``self.scheduler`` for inspection/equivalence testing.
+
+        Requests must carry **unique rids** (they key the decision
+        log) and prompts must fit ``seq_capacity``; the policy raises
+        ``ValueError`` otherwise — previously duplicate rids were
+        silently tolerated and oversized prompts overflowed the cache.
+        """
         B = self.slots
         cap = self.seq_capacity
         cache = self.model.init_cache(B, cap)
         cur_len = np.zeros((B,), np.int32)
         last_tok = np.zeros((B, 1), np.int32)
-        active: List[Optional[Request]] = [None] * B
-        queue = list(requests)
-        for r in queue:
+        by_rid = {r.rid: r for r in requests}
+        sched = SlotScheduler(B, cap)
+        self.scheduler = sched
+        for r in requests:
             r.submit_time = time.perf_counter()
+            sched.submit(r.rid, len(r.prompt), r.max_new_tokens)
         done: List[Request] = []
 
         def insert(slot: int, req: Request) -> None:
@@ -87,16 +103,12 @@ class BatchServer(SimObject):
             req.output.append(tok)
             last_tok[slot, 0] = tok
             cur_len[slot] = len(req.prompt)
-            active[slot] = req
 
-        while queue or any(a is not None for a in active):
-            # fill free slots
-            for slot in range(B):
-                if active[slot] is None and queue:
-                    insert(slot, queue.pop(0))
+        while not sched.idle():
+            # fill free slots (prefill emits each request's first token)
+            for slot, rid in sched.fill():
+                insert(slot, by_rid[rid])
             # one batched decode step for all active slots
-            if not any(a is not None for a in active):
-                continue
             nxt, _, cache = self._decode(self.params, {
                 "tokens": jnp.asarray(last_tok),
                 "cache": cache,
@@ -104,22 +116,17 @@ class BatchServer(SimObject):
             })
             nxt = np.asarray(jax.device_get(nxt))
             self.s_decode_steps.inc()
-            for slot in range(B):
-                req = active[slot]
-                if req is None:
-                    continue
+            sched.note_step()
+            for slot in sched.active_slots():
+                req = by_rid[sched.active[slot]]
                 tok = int(nxt[slot, 0])
                 req.output.append(tok)
                 self.s_tokens.inc()
                 cur_len[slot] += 1
                 last_tok[slot, 0] = tok
-                finished = (len(req.output) >= req.max_new_tokens
-                            or tok == req.eos_token
-                            or cur_len[slot] >= cap - 1)
-                if finished:
+                if sched.complete_token(slot, is_eos=tok == req.eos_token):
                     req.finish_time = time.perf_counter()
                     self.s_requests.inc()
                     self.s_latency.sample(req.finish_time - req.submit_time)
                     done.append(req)
-                    active[slot] = None
         return done

@@ -118,11 +118,24 @@ def v5e_degraded(hbm_frac: float = 0.5, ici_frac: float = 0.5,
     return Board(m, name=f"v5e_degraded_h{hbm_frac}_i{ici_frac}")
 
 
+def v5e_serving(nx: int = 8, ny: int = 8, replicas: int = 1, *,
+                chip: Optional[Dict] = None) -> Board:
+    """Serving deployment: ``replicas`` independent pod *slices* of
+    ``nx x ny`` chips each (inference replicas are sliced much smaller
+    than training pods).  With a dynamic serving workload every pod is
+    one continuous-batching replica; requests load-balance round-robin
+    (``repro.sim.workloads.ServeSim``)."""
+    # quantum 0: serving replicas never speak DCN, so no quantum model
+    m = _cluster("cluster", replicas, 0, nx, ny, chip, None, None)
+    return Board(m, name=f"v5e_serving_{replicas}x{nx}x{ny}")
+
+
 BOARDS: Dict[str, Callable[..., Board]] = {
     "v5e_pod": v5e_pod,
     "v5e_multipod": v5e_multipod,
     "v5e_straggler": v5e_straggler,
     "v5e_degraded": v5e_degraded,
+    "v5e_serving": v5e_serving,
 }
 
 

@@ -37,6 +37,12 @@ from repro.core.desim.trace import HloTrace
 CHECKPOINT_VERSION = 1
 CHECKPOINT_FORMAT = "repro.sim.checkpoint"
 
+# optional top-level key carrying a dynamic workload's state (pending
+# arrivals, scheduler state, percentile accumulators — see
+# ``repro.sim.workloads``).  Static-trace checkpoints omit it; the key
+# is additive, so the format version is unchanged.
+WORKLOAD_KEY = "workload"
+
 
 class CheckpointError(RuntimeError):
     pass

@@ -38,7 +38,15 @@ Exit-event semantics:
                      dist-gem5.
 * ``SAMPLE_BEGIN`` — a sampled-simulation window starts (emitted by
                      ``repro.sim.sampling``, not by ``Simulator``).
+* ``SLO_VIOLATION`` — a dynamic serving workload finished a request
+                     over its TTFT/latency SLO (``repro.sim.workloads.
+                     ServeSim`` with ``exit_on_slo=True``).
 * ``DONE``         — the workload completed; ``result()`` is available.
+
+Dynamic workloads (``repro.sim.workloads.DynamicWorkload``) generate
+ops *while the simulation runs* — ``Simulator`` co-simulates them:
+advance the engine to the workload's next external event, ``poll`` the
+workload, repeat.  See ``docs/serving.md``.
 """
 
 from __future__ import annotations
@@ -54,6 +62,7 @@ from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import TICKS_PER_S
 from repro.core.desim.trace import HloTrace
 from repro.sim.boards import Board
+from repro.sim.workloads import DynamicWorkload
 
 
 class ExitEventType(enum.Enum):
@@ -62,6 +71,7 @@ class ExitEventType(enum.Enum):
     WORK_BEGIN = "work_begin"
     WORK_END = "work_end"
     SAMPLE_BEGIN = "sample_begin"
+    SLO_VIOLATION = "slo_violation"
     DONE = "done"
 
 
@@ -151,8 +161,15 @@ class Simulator:
         if isinstance(board, ClusterModel):
             board = Board(machine=board)
         self.board = board.instantiate()     # Simulator owns instantiate()
-        self._trace = (workload if isinstance(workload, HloTrace)
-                       else workload.trace())
+        if isinstance(workload, DynamicWorkload):
+            # dynamic workloads inject their ops into a live run; the
+            # run begins from an empty trace that grows as events fire
+            self._dyn: Optional[DynamicWorkload] = workload
+            self._trace = HloTrace(f"dynamic:{getattr(workload, 'name', '')}")
+        else:
+            self._dyn = None
+            self._trace = (workload if isinstance(workload, HloTrace)
+                           else workload.trace())
         self._ex_cfg = dict(record_stats=record_stats,
                             record_timeline=record_timeline,
                             contention=contention)
@@ -173,10 +190,17 @@ class Simulator:
     # -- construction from a checkpoint ---------------------------------
     @classmethod
     def from_checkpoint(cls, source, board: Optional[Board] = None, *,
+                        workload=None,
                         checkpoint_dir: Optional[str] = None) -> "Simulator":
         """Resume a serialized simulation, optionally onto a
         re-parameterized ``board`` (the checkpoint-once, sweep-hardware
-        workflow).  ``source`` is a path or a checkpoint dict."""
+        workflow).  ``source`` is a path or a checkpoint dict.
+
+        A checkpoint of a *dynamic* workload stores the workload's
+        state but not its construction (request streams are code, not
+        data): pass an equivalently-built ``workload`` (same requests /
+        seed / knobs) and its state is restored into it.
+        """
         from repro.sim import serialize as ser
         ckpt = (ser.load_checkpoint(source) if isinstance(source, str)
                 else source)
@@ -186,7 +210,21 @@ class Simulator:
             board = Board(machine=ser.machine_from_dict(ckpt["machine"]),
                           algorithm=cfg["algorithm"],
                           straggler_slowdowns=cfg["straggler_slowdowns"])
-        sim = cls(board, ser.trace_from_checkpoint(ckpt),
+        if ser.WORKLOAD_KEY in ckpt \
+                and not isinstance(workload, DynamicWorkload):
+            raise ser.CheckpointError(
+                "checkpoint carries dynamic-workload state; pass the "
+                "rebuilt DynamicWorkload object (same request stream) "
+                "via workload=")
+        if workload is not None and ser.WORKLOAD_KEY not in ckpt:
+            # a static checkpoint resumes its own serialized trace; a
+            # passed workload would be silently ignored — refuse instead
+            raise ser.CheckpointError(
+                "a workload was passed but the checkpoint has no "
+                "workload state (it was taken of a static trace run, "
+                "which restores its own trace)")
+        sim = cls(board, workload if workload is not None
+                  else ser.trace_from_checkpoint(ckpt),
                   checkpoint_dir=checkpoint_dir,
                   record_stats=cfg["record_stats"],
                   record_timeline=cfg["record_timeline"],
@@ -201,7 +239,11 @@ class Simulator:
                 straggler_slowdowns=board.straggler_slowdowns)
         sim._ex = ser.restore_executor(ckpt, machine=board.machine,
                                        **overrides)
+        sim._trace = sim._ex._trace
         sim._install_hook()
+        if sim._dyn is not None:
+            sim._dyn.bind(sim._ex)
+            sim._dyn.load_state_dict(ckpt[ser.WORKLOAD_KEY])
         sim._started = True
         return sim
 
@@ -244,6 +286,8 @@ class Simulator:
         self._ex.drain()
         from repro.sim import serialize as ser
         ckpt = ser.checkpoint_executor(self._ex)
+        if self._dyn is not None:
+            ckpt[ser.WORKLOAD_KEY] = self._dyn.state_dict()
         self.last_checkpoint = ckpt
         path = None
         if self.checkpoint_dir:
@@ -255,7 +299,12 @@ class Simulator:
         # just took, so serialization is exercised on every checkpoint
         self._ex = ser.restore_executor(ckpt, machine=self.board.machine,
                                         **self._ex_cfg)
+        self._trace = self._ex._trace
         self._install_hook()
+        if self._dyn is not None:
+            # the workload resumes through its own serialization too
+            self._dyn.bind(self._ex)
+            self._dyn.load_state_dict(ckpt[ser.WORKLOAD_KEY])
         return ExitEvent(ExitEventType.CHECKPOINT, tick=requested_tick,
                          cause="checkpoint",
                          payload={"checkpoint": ckpt, "path": path,
@@ -265,20 +314,39 @@ class Simulator:
         if not self._started:
             self._ex.begin(self._trace)
             self._install_hook()
+            if self._dyn is not None:
+                self._dyn.bind(self._ex)
+                self._dyn.start()
             self._started = True
+
+    def _all_done(self) -> bool:
+        return self._ex.done() and (self._dyn is None or self._dyn.done())
 
     # -- the exit-event loop ----------------------------------------------
     def run(self) -> Iterator[ExitEvent]:
         """Generator of :class:`ExitEvent`s; drive multi-phase
         simulations by iterating (and scheduling further exits between
-        yields)."""
+        yields).
+
+        Dynamic workloads run as a co-simulation: the engine advances
+        to the workload's next external event (e.g. a request arrival),
+        then ``poll`` lets the workload inject ops before the engine
+        continues.  Workload-raised exits (SLO violations) yield like
+        any other exit event.
+        """
         self._ensure_started()
         stop = self._stop_check if self._has_markers else None
         while True:
             if self._marker_exits:
                 yield self._marker_exits.popleft()
                 continue
-            if self._ex.done():
+            if self._dyn is not None and self._dyn.pending_exits:
+                e = self._dyn.pending_exits.popleft()
+                yield ExitEvent(ExitEventType.SLO_VIOLATION,
+                                tick=int(e["tick"]), cause=e["cause"],
+                                payload=dict(e.get("payload", {})))
+                continue
+            if self._all_done():
                 if self._result is None:
                     self._result = self._ex.result()
                 # makespan tick, not queue tick: a restored run's queues
@@ -288,12 +356,24 @@ class Simulator:
                     tick=int(round(self._result.makespan_s * TICKS_PER_S)),
                     cause="workload complete")
                 return
-            if self._scheduled:
+            sched_tick = self._scheduled[0][0] if self._scheduled else None
+            dyn_tick = (self._dyn.next_event_tick()
+                        if self._dyn is not None else None)
+            if dyn_tick is not None and (sched_tick is None
+                                         or dyn_tick <= sched_tick):
+                # advance to the workload's next external event, then
+                # let it react (submit arrivals, wake idle replicas)
+                self._ex.advance(max_tick=dyn_tick, stop_check=stop)
+                if self._marker_exits:
+                    continue
+                self._dyn.poll(dyn_tick)
+                continue
+            if sched_tick is not None:
                 tick, _, kind = self._scheduled[0]
-                finished = self._ex.advance(max_tick=tick, stop_check=stop)
+                self._ex.advance(max_tick=tick, stop_check=stop)
                 if self._marker_exits:
                     continue                 # scheduled exit stays queued
-                if finished:
+                if self._all_done():
                     # workload ended before the exit point: drop it
                     self._scheduled.pop(0)
                     continue
@@ -305,6 +385,14 @@ class Simulator:
             else:
                 finished = self._ex.advance(stop_check=stop)
                 if self._marker_exits:
+                    continue
+                if self._dyn is not None:
+                    if (not self._dyn.done()
+                            and self._dyn.next_event_tick() is None
+                            and not self._dyn.pending_exits):
+                        raise RuntimeError(
+                            "dynamic workload stalled: engine idle, no "
+                            "pending arrivals, workload not done")
                     continue
                 if not finished:
                     self._ex.result()        # raises the deadlock error
@@ -344,6 +432,11 @@ class Simulator:
     def sim_root(self):
         """Root of the run's SimObject tree (stats live on it)."""
         return self._ex.sim_root
+
+    @property
+    def workload(self):
+        """The dynamic workload driving this run (None for traces)."""
+        return self._dyn
 
     @property
     def machine(self) -> ClusterModel:

@@ -99,3 +99,52 @@ def test_real_compile_scan_equals_unroll():
                                                 rel=0.05)
     analytic = L * 2 * B * D * D
     assert costs["unroll"].flops == pytest.approx(analytic, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# the shared dtype table (repro.core.desim.dtypes)
+# ---------------------------------------------------------------------------
+
+def test_both_hlo_parsers_agree_on_tricky_shapes():
+    """trace.shape_bytes and hlo_cost.shape_elems_bytes are two views
+    of one shared lexer; they must agree byte-for-byte on the awkward
+    cases: half-byte int4, one-byte f8 variants, f32[] scalars, tuple
+    return types, and zero-width token/opaque types."""
+    from repro.core.desim import dtypes
+    from repro.core.desim.trace import shape_bytes as trace_bytes
+
+    cases = {
+        "f8e4m3fn[128,64]{1,0}": 128 * 64 * 1,
+        "f8e5m2[16]": 16,
+        "s4[256,2]{1,0}": 256 * 2 * 0.5,          # packed int4: half bytes
+        "u4[3]": 1.5,                              # fractional total
+        "f32[]": 4,                                # scalar: empty dims
+        "(f32[2,3]{1,0}, s4[8], bf16[])": 2 * 3 * 4 + 4 + 2,
+        "(s32[], f32[128,256]{1,0}, f32[8,256,256]{2,1,0})":
+            4 + 128 * 256 * 4 + 8 * 256 * 256 * 4,
+        "token[]": 0,
+        "opaque[]": 0,
+        "mystery99[64]": 0,                        # unknown dtype: skipped
+        "pred[7]": 7,
+    }
+    for type_str, expect in cases.items():
+        tb = trace_bytes(type_str)
+        he, hb = shape_elems_bytes(type_str)
+        assert tb == pytest.approx(expect), type_str
+        assert hb == pytest.approx(expect), type_str
+        assert tb == hb, type_str
+        assert dtypes.shape_bytes(type_str) == tb
+
+
+def test_dtype_table_is_single_sourced():
+    """Neither parser carries a private copy of the width table."""
+    import repro.core.desim.hlo_cost as hc
+    import repro.core.desim.trace as tr
+    from repro.core.desim import dtypes
+    assert not hasattr(tr, "_DTYPE_BYTES")
+    assert not hasattr(hc, "_DTYPE_BYTES")
+    assert tr.shape_bytes is dtypes.shape_bytes
+    assert hc.shape_elems_bytes is dtypes.shape_elems_bytes
+    # s4/u4 stay half-byte, f8s one byte (the values tests rely on)
+    assert dtypes.DTYPE_BYTES["s4"] == 0.5
+    assert dtypes.DTYPE_BYTES["f8e4m3fn"] == 1

@@ -1,0 +1,195 @@
+"""The headline serving test: the real ``repro.serve.server`` slot
+scheduler and the DES ``ServeSim`` make *identical* scheduling
+decisions (admission order, slot assignment, finish order) on the same
+request stream — because both drive the same pure
+``repro.serve.policy.SlotScheduler``.  Plus unit coverage of the
+policy's state machine itself."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import BatchServer, Request
+from repro.serve.policy import Decision, SlotScheduler
+from repro.sim import (ServeRequest, ServeSim, ServingCost, Simulator,
+                       v5e_serving)
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests
+# ---------------------------------------------------------------------------
+
+def _drive(sched: SlotScheduler, max_iters: int = 200) -> None:
+    """Run the engine contract loop to completion (no eos)."""
+    for _ in range(max_iters):
+        if sched.idle():
+            return
+        sched.fill()
+        sched.note_step()
+        for slot in sched.active_slots():
+            sched.complete_token(slot)
+    raise AssertionError("policy did not converge")
+
+
+def test_fifo_admission_lowest_slot_first():
+    s = SlotScheduler(num_slots=2, seq_capacity=32)
+    for rid in range(4):
+        s.submit(rid, prompt_len=4, max_new_tokens=3)
+    assert s.fill() == [(0, 0), (1, 1)]     # FIFO into ascending slots
+    # nothing free: fill is a no-op
+    assert s.fill() == []
+    # finish slot 1 -> next fill admits rid 2 there
+    s.note_step()
+    s.complete_token(1)                     # not finished (needs 3 tokens)
+    s.note_step()
+    fin = s.complete_token(1)
+    assert fin is not None and fin.reason == "max_tokens"
+    assert s.fill() == [(1, 2)]
+
+
+def test_finish_reasons_and_token_accounting():
+    s = SlotScheduler(num_slots=1, seq_capacity=8)
+    # capacity: prompt 5 in cap 8 -> context hits cap-1 after 2 decodes
+    s.submit(0, prompt_len=5, max_new_tokens=100)
+    s.fill()
+    s.note_step()
+    assert s.complete_token(0) is None
+    s.note_step()
+    d = s.complete_token(0)
+    assert d.reason == "capacity"
+    assert s.requests[0].tokens_out == 3    # prefill token + 2 decodes
+    # eos beats capacity when flagged earlier
+    s.submit(1, prompt_len=2, max_new_tokens=100)
+    s.fill()
+    s.note_step()
+    d = s.complete_token(0, is_eos=True)
+    assert d.reason == "eos"
+    # max_tokens wins over a simultaneous eos (the server's check order)
+    s.submit(2, prompt_len=2, max_new_tokens=2)
+    s.fill()
+    s.note_step()
+    d = s.complete_token(0, is_eos=True)
+    assert d.reason == "max_tokens"
+
+
+def test_policy_validation():
+    s = SlotScheduler(num_slots=2, seq_capacity=8)
+    s.submit(0, prompt_len=3, max_new_tokens=4)
+    with pytest.raises(ValueError, match="duplicate"):
+        s.submit(0, prompt_len=3, max_new_tokens=4)
+    with pytest.raises(ValueError, match="fit"):
+        s.submit(1, prompt_len=8, max_new_tokens=4)
+    with pytest.raises(ValueError, match="not active"):
+        s.complete_token(0)
+
+
+def test_policy_state_dict_round_trip():
+    s = SlotScheduler(num_slots=2, seq_capacity=32)
+    for rid in range(5):
+        s.submit(rid, prompt_len=3 + rid, max_new_tokens=4)
+    s.fill()
+    s.note_step()
+    s.complete_token(0)
+    import json
+    state = json.loads(json.dumps(s.state_dict()))   # through JSON
+    s2 = SlotScheduler(num_slots=2, seq_capacity=32)
+    s2.load_state_dict(state)
+    assert s2.decisions == s.decisions
+    assert list(s2.queue) == list(s.queue)
+    assert s2.active == s.active
+    _drive(s)
+    _drive(s2)
+    assert s2.decisions == s.decisions
+
+
+# ---------------------------------------------------------------------------
+# the real server vs the DES (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+class ToyModel:
+    """Minimal ``Model`` duck-type: deterministic next-token logits and
+    a tiny cache, so ``BatchServer``'s jitted steps compile in
+    milliseconds.  Scheduling never depends on token *values* (no eos
+    in the stream), so any model exercises the same decisions."""
+
+    def prefill(self, params, batch, sharder=None, chunk=2048,
+                seq_capacity=0):
+        toks = batch["tokens"]
+        cache = jnp.zeros((toks.shape[0], seq_capacity, 4), jnp.bfloat16)
+        logits = jax.nn.one_hot((toks[:, -1:] + 1) % 32, 32) * 10.0
+        return logits, cache
+
+    def decode(self, params, batch, cache, cur_len, sharder=None):
+        logits = jax.nn.one_hot((batch["tokens"] + 1) % 32, 32) * 10.0
+        return logits, cache
+
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+        return jnp.zeros((batch, seq_len, 4), dtype)
+
+
+def _request_stream(seed: int, n: int, cap: int):
+    rng = np.random.RandomState(seed)
+    prompts = [np.arange(1, 1 + rng.randint(2, min(cap - 2, 9)),
+                         dtype=np.int32) for _ in range(n)]
+    max_new = [int(rng.randint(2, 10)) for _ in range(n)]
+    return prompts, max_new
+
+
+@pytest.mark.parametrize("seed,slots,cap", [(11, 3, 16), (5, 2, 8),
+                                            (99, 4, 32)])
+def test_des_matches_real_server_decisions(seed, slots, cap):
+    prompts, max_new = _request_stream(seed, 14, cap)
+
+    # the real continuous-batching server (jax inference loop)
+    srv = BatchServer(model=ToyModel(), params={}, slots=slots,
+                      seq_capacity=cap)
+    srv.instantiate()
+    done = srv.serve([Request(rid=i, prompt=p, max_new_tokens=m)
+                      for i, (p, m) in enumerate(zip(prompts, max_new))])
+    assert len(done) == len(prompts)
+    real = srv.scheduler.decisions
+
+    # the DES serving simulation of the same stream (all arrive at t=0,
+    # like the server's pre-queued batch)
+    reqs = [ServeRequest(rid=i, prompt_len=len(p), decode_len=m)
+            for i, (p, m) in enumerate(zip(prompts, max_new))]
+    ssim = ServeSim(cost=ServingCost.from_params(1e9, layers=4, d_model=128,
+                                                 chips=16),
+                    requests=reqs, slots=slots, seq_capacity=cap)
+    Simulator(v5e_serving(4, 4), ssim).run_to_completion()
+    des = ssim.schedulers[0].decisions
+
+    assert real == des                      # the whole point of the PR
+    admits = [d for d in real if d.kind == "admit"]
+    finishes = [d for d in real if d.kind == "finish"]
+    assert len(admits) == len(finishes) == len(prompts)
+
+
+def test_des_decisions_invariant_to_hardware_speed():
+    """Scheduling decisions are policy, not timing: a 10x slower board
+    produces the same decision log (only the timestamps move)."""
+    prompts, max_new = _request_stream(42, 10, 16)
+    reqs = [ServeRequest(rid=i, prompt_len=len(p), decode_len=m)
+            for i, (p, m) in enumerate(zip(prompts, max_new))]
+    logs = []
+    for hbm in (819e9, 81.9e9):
+        ssim = ServeSim(cost=ServingCost.from_params(1e9, layers=4,
+                                                     d_model=128, chips=16),
+                        requests=reqs, slots=3, seq_capacity=16)
+        Simulator(v5e_serving(4, 4, chip={"hbm_bw": hbm}),
+                  ssim).run_to_completion()
+        logs.append(ssim.schedulers[0].decisions)
+    assert logs[0] == logs[1]
+
+
+def test_server_output_tokens_match_policy_counts():
+    """The refactored server's generated-token counts agree with the
+    policy's accounting (prefill token + one per decode step)."""
+    prompts, max_new = _request_stream(7, 6, 16)
+    srv = BatchServer(model=ToyModel(), params={}, slots=2, seq_capacity=16)
+    srv.instantiate()
+    done = srv.serve([Request(rid=i, prompt=p, max_new_tokens=m)
+                      for i, (p, m) in enumerate(zip(prompts, max_new))])
+    for req in done:
+        assert len(req.output) == srv.scheduler.requests[req.rid].tokens_out

@@ -1,0 +1,250 @@
+"""Dynamic serving workload on the event engine: arrivals as events,
+slot contention, SLO exit events, closed-loop clients, multi-replica
+round-robin — the scenario family the tentpole opens."""
+
+import pytest
+
+from repro.sim import (ExitEventType, ServeRequest, ServeSim, ServingCost,
+                       Simulator, poisson_requests, trace_requests,
+                       uniform_requests, v5e_pod, v5e_serving)
+
+COST = ServingCost.from_params(7e9, layers=32, d_model=4096, chips=64)
+
+
+def _serve(requests, board=None, **params):
+    srv = ServeSim(cost=COST, requests=requests, **params)
+    sim = Simulator(board or v5e_serving(8, 8), srv)
+    events = list(sim.run())
+    return srv, sim, events
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_poisson_requests_are_seed_reproducible():
+    a = poisson_requests(40, 100.0, seed=9)
+    b = poisson_requests(40, 100.0, seed=9)
+    c = poisson_requests(40, 100.0, seed=10)
+    assert a == b
+    assert a != c
+    assert all(x.arrival_tick <= y.arrival_tick for x, y in zip(a, a[1:]))
+
+
+def test_trace_requests_sorted_and_indexed():
+    reqs = trace_requests([(0.2, 64, 8), (0.1, 32, 4), (0.3, 16, 2)])
+    assert [r.rid for r in reqs] == [0, 1, 2]
+    assert [r.prompt_len for r in reqs] == [32, 64, 16]   # sorted by time
+    assert reqs[0].arrival_tick == 100_000_000
+
+
+def test_serving_run_is_deterministic():
+    reqs = poisson_requests(30, 300.0, seed=4, decode_len=(4, 16))
+    s1, sim1, _ = _serve(reqs, slots=4, seq_capacity=1024)
+    s2, sim2, _ = _serve(reqs, slots=4, seq_capacity=1024)
+    assert sim1.result().makespan_s == sim2.result().makespan_s
+    assert s1.summary() == s2.summary()
+    assert s1.schedulers[0].decisions == s2.schedulers[0].decisions
+
+
+# ---------------------------------------------------------------------------
+# the serving model itself
+# ---------------------------------------------------------------------------
+
+def test_all_requests_complete_with_metrics():
+    reqs = poisson_requests(25, 200.0, seed=1, decode_len=(4, 12))
+    srv, sim, events = _serve(reqs, slots=4, seq_capacity=1024)
+    assert [e.kind for e in events] == [ExitEventType.DONE]
+    summ = srv.summary()
+    assert summ["requests"] == 25
+    assert summ["throughput_rps"] > 0
+    assert summ["tokens_out"] > 0
+    assert 0 < summ["p50_ttft_s"] <= summ["p99_ttft_s"]
+    assert summ["p50_latency_s"] <= summ["p99_latency_s"]
+    # every ttft/latency was sampled exactly once per request
+    assert srv.p_latency.count == 25
+    assert srv.p_ttft.count == 25
+    # engine stats flow through the normal stats tree too
+    flat = srv.stats.flat()
+    assert flat["serve.requests_done"] == 25
+
+
+def test_kv_slot_contention_queues_requests():
+    """With 1 slot the same stream waits far longer for admission than
+    with 8 slots (KV slots are the contended resource)."""
+    reqs = poisson_requests(20, 2000.0, seed=2, prompt_len=(128, 256),
+                            decode_len=(16, 32))
+    few, _, _ = _serve(reqs, slots=1, seq_capacity=1024)
+    many, _, _ = _serve(reqs, slots=8, seq_capacity=1024)
+    assert few.p_queue_wait.quantile(0.9) > many.p_queue_wait.quantile(0.9)
+    assert few.summary()["throughput_rps"] < many.summary()["throughput_rps"]
+    # decode batching actually happened in the 8-slot run
+    assert many.d_batch.mean > 1.0
+
+
+def test_slo_violation_exit_events():
+    reqs = poisson_requests(10, 5000.0, seed=3, prompt_len=(256, 512),
+                            decode_len=(16, 32))
+    srv, sim, events = _serve(reqs, slots=1, seq_capacity=1024,
+                              slo_ttft_s=1e-6, exit_on_slo=True)
+    kinds = [e.kind for e in events]
+    assert kinds[-1] == ExitEventType.DONE
+    viol = [e for e in events if e.kind is ExitEventType.SLO_VIOLATION]
+    assert len(viol) == srv.s_slo_viol.value() > 0
+    assert {"rid", "ttft_s", "latency_s"} <= set(viol[0].payload)
+    assert srv.summary()["goodput_rps"] < srv.summary()["throughput_rps"]
+
+
+def test_closed_loop_keeps_concurrency_bounded():
+    reqs = uniform_requests(24, seed=5, prompt_len=(64, 128),
+                            decode_len=(8, 16))
+    srv, sim, _ = _serve(reqs, slots=8, seq_capacity=1024,
+                         closed_loop_clients=3, think_time_s=0.001)
+    assert srv.summary()["requests"] == 24
+    # never more than the client population in flight
+    assert srv.d_batch.value()["max"] <= 3
+
+
+def test_multi_replica_round_robin():
+    reqs = poisson_requests(20, 500.0, seed=6, decode_len=(4, 8))
+    srv, sim, _ = _serve(reqs, board=v5e_serving(4, 4, replicas=2),
+                         slots=4, seq_capacity=1024)
+    assert srv.summary()["requests"] == 20
+    scheds = srv.schedulers
+    assert len(scheds) == 2
+    # rid i goes to replica i % 2
+    for p, sched in enumerate(scheds):
+        rids = {d.rid for d in sched.decisions}
+        assert rids == {r.rid for r in reqs if r.rid % 2 == p}
+    # compute totals count BOTH replicas' injected ops (each op runs
+    # once on its owning pod, so compute_s == sum of chip busy time)
+    stats = sim.result().stats
+    assert sim.result().compute_s == pytest.approx(
+        stats["sim.chip0.busy_seconds"] + stats["sim.chip1.busy_seconds"],
+        rel=1e-9)
+
+
+def test_serving_on_training_board_and_degraded_hardware():
+    """Serving runs on any existing board; slower hardware serves the
+    same stream with a longer makespan."""
+    reqs = poisson_requests(15, 1000.0, seed=8, decode_len=(4, 8))
+    _, fast, _ = _serve(reqs, board=v5e_pod(), slots=4, seq_capacity=1024)
+    _, slow, _ = _serve(reqs, board=v5e_pod(chip={"hbm_bw": 819e9 / 8}),
+                        slots=4, seq_capacity=1024)
+    assert slow.result().makespan_s > fast.result().makespan_s
+
+
+def test_max_tick_exit_interleaves_with_serving():
+    reqs = poisson_requests(20, 500.0, seed=12, decode_len=(8, 16))
+    srv = ServeSim(cost=COST, requests=reqs, slots=4, seq_capacity=1024)
+    sim = Simulator(v5e_serving(8, 8), srv)
+    sim.schedule_max_tick(1_000_000)         # 1 ms, mid-stream
+    kinds = [e.kind for e in sim.run()]
+    assert kinds[0] == ExitEventType.MAX_TICK
+    assert kinds[-1] == ExitEventType.DONE
+    assert srv.summary()["requests"] == 20
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="rid"):
+        ServeSim(cost=COST, requests=[ServeRequest(rid=3, prompt_len=8,
+                                                   decode_len=4)])
+    with pytest.raises(ValueError, match="at least one"):
+        ServeSim(cost=COST, requests=[])
+    # oversized prompts fail at construction, not mid-simulation
+    with pytest.raises(ValueError, match="fit"):
+        ServeSim(cost=COST, seq_capacity=512,
+                 requests=[ServeRequest(rid=0, prompt_len=600,
+                                        decode_len=4)])
+    with pytest.raises(ValueError, match=">= 1"):
+        ServeSim(cost=COST, requests=[ServeRequest(rid=0, prompt_len=8,
+                                                   decode_len=0)])
+
+
+# ---------------------------------------------------------------------------
+# inject_op contract (the executor layer the workloads build on)
+# ---------------------------------------------------------------------------
+
+def test_inject_op_honors_ready_floor_behind_pending_dep():
+    """An injected op with an in-flight dep must not issue before its
+    requested ``ready`` tick, even when the dep finishes earlier."""
+    from repro.core.desim.trace import HloTrace, TraceOp
+    board = v5e_pod()
+    ex = board.executor()
+    ex.begin(HloTrace("dyn", ops=[TraceOp("compute", flops=1e12,
+                                          bytes=1e9)]))
+    floor = 10_000_000_000           # 10 s, far beyond the dep's end
+    idx = ex.inject_op(TraceOp("compute", flops=1e9, bytes=1e6,
+                               deps=(0,), name="late"), ready=floor)
+    seen = {}
+    ex.injection_hook = (lambda op, i, pod, start, end:
+                         seen.setdefault(i, start))
+    ex.advance()
+    assert seen[idx] >= floor
+
+
+def test_inject_op_from_completion_hook_respects_pending_deps():
+    """An injection_hook that reacts to op A's completion by injecting
+    C with deps on A *and* a still-in-flight B must not see C issued
+    until B completes (the dependents list is snapshotted before hooks
+    run, so the freshly-injected C is not double-decremented)."""
+    from repro.core.desim.trace import HloTrace, TraceOp
+    board = v5e_pod()
+    ex = board.executor()
+    ex.begin(HloTrace("dyn", ops=[]))
+    spans = {}
+    a = ex.inject_op(TraceOp("compute", flops=1e9, bytes=1e6, name="A"),
+                     ready=0)
+    b = ex.inject_op(TraceOp("compute", flops=1e13, bytes=1e10, name="B"),
+                     ready=0)
+
+    def hook(op, idx, pod, start, end):
+        spans[op.name] = (start, end)
+        if op.name == "A":
+            c = ex.inject_op(TraceOp("compute", flops=1e9, bytes=1e6,
+                                     deps=(a, b), name="C"), ready=end)
+            assert c == 2
+    ex.injection_hook = hook
+    assert ex.advance()
+    assert spans["C"][0] >= spans["B"][1]    # C waited for B
+
+
+def test_inject_op_rejects_dcn_routed_collectives():
+    from repro.core.desim.trace import HloTrace, TraceOp
+    from repro.sim import v5e_multipod
+    board = v5e_multipod(2)
+    ex = board.executor()
+    ex.begin(HloTrace("dyn", ops=[TraceOp("compute", flops=1e9,
+                                          bytes=1e6)]))
+    with pytest.raises(ValueError, match="dcn"):
+        ex.inject_op(TraceOp("all-reduce", coll_bytes=1e6, scope="dcn",
+                             participants=board.machine.num_chips),
+                     ready=0, pod=0)
+
+
+def test_sim_stack_import_stays_jax_free():
+    """The DES must stay importable (and fast) without jax: the shared
+    policy import must not drag repro.serve.server's jax dependency
+    into repro.sim (serve/__init__ loads jax modules lazily)."""
+    import subprocess
+    import sys
+    code = ("import repro.sim, repro.serve, sys; "
+            "assert 'jax' not in sys.modules, 'jax leaked into the DES'")
+    subprocess.run([sys.executable, "-c", code], check=True)
+
+
+def test_serving_cost_model_shapes():
+    c = ServingCost.from_params(7e9, layers=32, d_model=4096, chips=64)
+    f1, b1 = c.prefill_cost(128)
+    f2, b2 = c.prefill_cost(256)
+    assert f2 == pytest.approx(2 * f1)       # prefill flops scale with prompt
+    assert b2 > b1
+    df1, db1 = c.decode_cost(1, 128)
+    df8, db8 = c.decode_cost(8, 1024)
+    assert df8 == pytest.approx(8 * df1)     # decode flops scale with batch
+    assert db8 > db1                         # more KV context to stream
+    # decode is weight-read dominated at small batch (memory bound)
+    assert db1 * 64 == pytest.approx(c.weight_bytes
+                                     + c.kv_bytes_per_token * 129)
+    assert c.kv_slot_bytes(2048) == pytest.approx(
+        c.kv_bytes_per_token * 2048)

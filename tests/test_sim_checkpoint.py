@@ -10,10 +10,12 @@ import pytest
 
 from repro.core.desim.executor import TraceExecutor
 from repro.core.desim.trace import analytic_trace
-from repro.sim import (CheckpointError, ExitEventType, Simulator,
+from repro.sim import (WORKLOAD_KEY, CheckpointError, ExitEventType,
+                       ServeSim, ServingCost, Simulator,
                        checkpoint_executor, load_checkpoint,
-                       machine_from_dict, restore_executor,
-                       save_checkpoint, v5e_multipod, v5e_pod)
+                       machine_from_dict, poisson_requests,
+                       restore_executor, save_checkpoint, v5e_multipod,
+                       v5e_pod, v5e_serving)
 
 COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
 TAIL = [{"kind": "all-reduce", "bytes": 1e9, "participants": 512,
@@ -202,6 +204,118 @@ def test_simulator_from_checkpoint_file(tmp_path):
     assert sim.checkpoint_paths and os.path.exists(sim.checkpoint_paths[0])
     sim2 = Simulator.from_checkpoint(sim.checkpoint_paths[0])
     assert sim2.run_to_completion().makespan_s == ref.makespan_s
+
+
+# ---------------------------------------------------------------------------
+# dynamic workloads: snapshot mid-serving, restore bit-identically
+# ---------------------------------------------------------------------------
+
+def _serve_workload(slots=4):
+    cost = ServingCost.from_params(70e9, layers=80, d_model=8192, chips=64)
+    # rate chosen so arrivals span most of the run: a 40% checkpoint
+    # catches pending arrivals AND in-flight requests
+    reqs = poisson_requests(50, 30.0, seed=13, prompt_len=(64, 256),
+                            decode_len=(8, 48))
+    return ServeSim(cost=cost, requests=reqs, slots=slots, seq_capacity=512,
+                    slo_ttft_s=0.02, slo_latency_s=2.0)
+
+
+def _serve_reference(board):
+    srv = _serve_workload()
+    sim = Simulator(board(), srv)
+    sim.run_to_completion()
+    return srv, sim
+
+
+def _serving_fingerprint(srv, sim):
+    """Everything that must survive a checkpoint bit-identically."""
+    return {
+        "makespan": sim.result().makespan_s,
+        "stats": sim.result().stats,
+        "summary": srv.summary(),
+        "decisions": [s.decisions for s in srv.schedulers],
+        "percentile_state": srv.p_latency.state_dict(),
+    }
+
+
+@pytest.mark.parametrize("board", [lambda: v5e_serving(8, 8),
+                                   lambda: v5e_serving(4, 4, replicas=2)])
+def test_dynamic_checkpoint_resumes_identically(board):
+    """CHECKPOINT mid-serving (in-flight requests, pending arrivals,
+    slot occupancy, percentile-stat state) resumes through the restore
+    path and finishes exactly like an uninterrupted run."""
+    ref_srv, ref_sim = _serve_reference(board)
+    ref = _serving_fingerprint(ref_srv, ref_sim)
+    assert ref["decisions"][0]            # the run actually scheduled
+
+    srv = _serve_workload()
+    sim = Simulator(board(), srv)
+    mid = int(ref["makespan"] * 1e9 * 0.4)
+    sim.schedule_checkpoint(mid)
+    kinds = [ev.kind for ev in sim.run()]
+    assert kinds == [ExitEventType.CHECKPOINT, ExitEventType.DONE]
+    ckpt = sim.last_checkpoint
+    assert WORKLOAD_KEY in ckpt
+    # the checkpoint caught the serving mid-flight, not at the edges
+    wl = ckpt[WORKLOAD_KEY]
+    assert wl["heap"], "checkpoint should still have pending arrivals"
+    assert 0 < wl["done_count"] < 50
+    assert _serving_fingerprint(srv, sim) == ref
+
+
+def test_dynamic_checkpoint_file_restores_into_fresh_workload(tmp_path):
+    """A serving checkpoint on disk restores into a *rebuilt* workload
+    object (same seed => same request stream) and finishes
+    bit-identically — the full JSON round trip."""
+    ref_srv, ref_sim = _serve_reference(lambda: v5e_serving(8, 8))
+    ref = _serving_fingerprint(ref_srv, ref_sim)
+
+    srv = _serve_workload()
+    sim = Simulator(v5e_serving(8, 8), srv, checkpoint_dir=str(tmp_path))
+    sim.schedule_checkpoint(int(ref["makespan"] * 1e9 * 0.5))
+    for _ in sim.run():
+        pass
+    path = sim.checkpoint_paths[0]
+    with open(path) as f:
+        assert WORKLOAD_KEY in json.load(f)
+
+    fresh = _serve_workload()
+    sim2 = Simulator.from_checkpoint(path, workload=fresh)
+    sim2.run_to_completion()
+    assert _serving_fingerprint(fresh, sim2) == ref
+
+
+def test_dynamic_checkpoint_guard_rails():
+    srv = _serve_workload()
+    sim = Simulator(v5e_serving(8, 8), srv)
+    ckpt = sim.save_checkpoint()          # tick-0 dynamic checkpoint
+    assert WORKLOAD_KEY in ckpt
+    # a tick-0 checkpoint has empty percentile sketches; the file must
+    # still be strict RFC 8259 JSON (no Infinity literals)
+    json.dumps(ckpt, allow_nan=False)
+    # restoring without the workload object is refused
+    with pytest.raises(CheckpointError, match="workload"):
+        Simulator.from_checkpoint(ckpt)
+    # ...and a static trace passed as workload= must not bypass that
+    with pytest.raises(CheckpointError, match="DynamicWorkload"):
+        Simulator.from_checkpoint(ckpt, workload=_trace(layers=2,
+                                                        tail=False))
+    # restoring a STATIC checkpoint with a workload is refused too
+    # (any workload — a static checkpoint restores its own trace, so a
+    # passed one would be silently ignored)
+    static = Simulator(v5e_pod(), _trace(layers=4, tail=False))
+    sckpt = static.save_checkpoint()
+    with pytest.raises(CheckpointError, match="no workload state"):
+        Simulator.from_checkpoint(sckpt, workload=_serve_workload())
+    with pytest.raises(CheckpointError, match="no workload state"):
+        Simulator.from_checkpoint(sckpt, workload=_trace(layers=2,
+                                                         tail=False))
+    # a mismatched request stream is rejected at load time
+    cost = ServingCost.from_params(1e9, layers=4, d_model=128, chips=16)
+    other = ServeSim(cost=cost,
+                     requests=poisson_requests(3, 10.0, seed=0))
+    with pytest.raises(ValueError, match="request"):
+        Simulator.from_checkpoint(ckpt, workload=other)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,156 @@
+"""The streaming percentile Stat: relative-error accuracy bounds vs
+numpy on known distributions, and checkpoint-grade state round-trips."""
+
+import json
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.stats import Percentiles, StatGroup
+
+QS = [0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99]
+
+
+def _check_accuracy(samples, rel_err):
+    p = Percentiles("x", rel_err=rel_err)
+    for v in samples:
+        p.sample(v)
+    arr = np.asarray(samples)
+    for q in QS:
+        # compare against the exact order statistic the sketch targets
+        exact = float(np.quantile(arr, q, method="lower"))
+        got = p.quantile(q)
+        assert got == pytest.approx(exact, rel=2 * rel_err), (q, got, exact)
+
+
+@pytest.mark.parametrize("rel_err", [0.01, 0.05])
+def test_quantile_accuracy_lognormal(rel_err):
+    rng = random.Random(0)
+    _check_accuracy([rng.lognormvariate(0.0, 1.5) for _ in range(20_000)],
+                    rel_err)
+
+
+def test_quantile_accuracy_uniform_and_exponential():
+    rng = random.Random(1)
+    _check_accuracy([rng.uniform(1e-3, 10.0) for _ in range(20_000)], 0.01)
+    _check_accuracy([rng.expovariate(3.0) for _ in range(20_000)], 0.01)
+
+
+def test_heavy_tail_relative_error_holds_at_p99():
+    """The point of log bins: a distribution whose p99 is ~1000x the
+    median still reports p99 within relative (not absolute) error."""
+    rng = random.Random(2)
+    samples = [rng.lognormvariate(0.0, 3.0) for _ in range(50_000)]
+    p = Percentiles("lat", rel_err=0.01)
+    for v in samples:
+        p.sample(v)
+    exact = float(np.quantile(np.asarray(samples), 0.99, method="lower"))
+    assert abs(p.quantile(0.99) - exact) / exact <= 0.02
+
+
+def test_small_and_degenerate_inputs():
+    p = Percentiles("x")
+    assert p.quantile(0.5) == 0.0           # empty sketch
+    assert p.value()["count"] == 0
+    p.sample(0.0)                           # zero bin
+    p.sample(-1.0)                          # clamped to zero bin
+    assert p.quantile(0.5) == 0.0
+    assert p.value()["min"] == 0.0          # clamp covers min/mean too
+    assert p.mean == 0.0
+    p2 = Percentiles("y")
+    p2.sample(42.0)
+    assert p2.quantile(0.0) == pytest.approx(42.0, rel=0.02)
+    assert p2.quantile(1.0) == pytest.approx(42.0, rel=0.02)
+    assert p2.mean == 42.0
+    with pytest.raises(ValueError):
+        p2.quantile(1.5)
+    with pytest.raises(ValueError):
+        Percentiles("z", rel_err=1.0)
+
+
+def test_value_dict_shape():
+    p = Percentiles("lat", unit="s")
+    for i in range(1, 101):
+        p.sample(i / 100.0)
+    v = p.value()
+    assert set(v) == {"count", "mean", "min", "max",
+                      "p50", "p90", "p95", "p99"}
+    assert v["count"] == 100
+    assert v["min"] == 0.01 and v["max"] == 1.0
+    assert v["p50"] <= v["p90"] <= v["p95"] <= v["p99"]
+
+
+def test_state_dict_round_trip_continues_streaming():
+    """Restore + continue == never paused (the checkpoint contract all
+    Stats obey), including through a JSON round trip."""
+    rng = random.Random(3)
+    first = [rng.lognormvariate(0, 1) for _ in range(5000)]
+    rest = [rng.lognormvariate(0, 1) for _ in range(5000)]
+
+    ref = Percentiles("x")
+    for v in first + rest:
+        ref.sample(v)
+
+    a = Percentiles("x")
+    for v in first:
+        a.sample(v)
+    b = Percentiles("x")
+    b.load_state_dict(json.loads(json.dumps(a.state_dict())))
+    for v in rest:
+        b.sample(v)
+    assert b.state_dict() == ref.state_dict()
+    assert b.value() == ref.value()
+
+
+def test_empty_sketch_state_is_strict_json():
+    """An unsampled sketch must serialize without Infinity literals
+    (RFC 8259 checkpoints) and restore to a working empty sketch."""
+    p = Percentiles("x")
+    s = json.loads(json.dumps(p.state_dict(), allow_nan=False))
+    q = Percentiles("x")
+    q.load_state_dict(s)
+    q.sample(2.0)
+    assert q.value()["min"] == 2.0 and q.value()["max"] == 2.0
+    # Distribution obeys the same contract
+    from repro.core.stats import Distribution
+    d = Distribution("y")
+    s2 = json.loads(json.dumps(d.state_dict(), allow_nan=False))
+    d2 = Distribution("y")
+    d2.load_state_dict(s2)
+    d2.sample(3.0)
+    assert d2.value()["min"] == 3.0
+
+
+def test_state_dict_rejects_mismatched_resolution():
+    a = Percentiles("x", rel_err=0.01)
+    a.sample(1.0)
+    b = Percentiles("x", rel_err=0.05)
+    with pytest.raises(ValueError, match="rel_err"):
+        b.load_state_dict(a.state_dict())
+
+
+def test_percentiles_in_stat_group_tree():
+    g = StatGroup("root")
+    p = g.percentiles("ttft", "time to first token", "s")
+    p.sample(0.25)
+    assert g.flat()["root.ttft"]["count"] == 1
+    # group-level state dict carries the sketch
+    g2 = StatGroup("root")
+    g2.percentiles("ttft", "time to first token", "s")
+    g2.load_state_dict(g.state_dict())
+    assert g2["ttft"].value() == p.value()
+
+
+def test_bin_midpoint_is_within_gamma_bound():
+    """Every representable value is within rel_err of its bin midpoint
+    (the DDSketch guarantee the quantile query rests on)."""
+    p = Percentiles("x", rel_err=0.02)
+    for v in [1e-6, 0.37, 1.0, 99.5, 1e9]:
+        q = Percentiles("q", rel_err=0.02)
+        q.sample(v)
+        # edge values sit at exactly rel_err from the midpoint; allow
+        # a hair of float slack on top of the guarantee
+        assert q.quantile(0.5) == pytest.approx(v, rel=0.0201)
+        assert math.isfinite(q.quantile(0.5))

@@ -7,7 +7,9 @@
 #   CI_MARKER="" tools/ci.sh # everything
 #   tools/ci.sh -k executor  # extra pytest args pass through
 #   tools/ci.sh smoke        # example + benchmark bit-rot tier: runs
-#                            # examples/quickstart.py and
+#                            # examples/quickstart.py, the serving smoke
+#                            # lap (examples/serve_sim.py: short Poisson
+#                            # run, asserts nonzero goodput + stats), and
 #                            # `python -m benchmarks.run --json fidelity`
 #                            # (writes BENCH_desim.json)
 set -euo pipefail
@@ -16,6 +18,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "${1-}" = "smoke" ]; then
   shift
   python examples/quickstart.py
+  python examples/serve_sim.py
   python -m benchmarks.run --json fidelity
   echo "smoke tier OK"
   exit 0
