@@ -1,0 +1,121 @@
+"""Fault-tolerance DSE sweep: checkpoint interval x MTBF -> goodput
+frontier, validated against the Young/Daly optimum-interval formula.
+
+The gem5 use case applied to training reliability engineering: for
+each MTBF setting, sweep the FT policy's checkpoint interval with
+``TrainSim`` on the ``v5e_unreliable`` board and read off the goodput
+frontier — the interval that best balances checkpoint overhead
+(too-frequent saves) against rollback loss (too-rare saves).  The
+classic first-order answer is Young's ``tau = sqrt(2 * delta * M)``
+(Daly's refinement subtracts ``delta``); the sweep recovers it from
+the discrete-event simulation within 25% at every MTBF, which is the
+acceptance bar for the whole failure/recovery timing model.
+
+Methodology: common random numbers — every interval is evaluated on
+the *same* seeded failure schedules (the schedule does not depend on
+the interval), so goodput differences across intervals are signal,
+not sampling noise; per-(MTBF, interval) goodput is the mean over
+``SEEDS`` schedules, and the optimum is the argmax refined by a
+log-space parabolic fit through its neighbours.
+
+Emits one row per cell plus a summary row per MTBF:
+  ft_sweep/mtbf<M>/i<interval> , wall_us , goodput=...
+  ft_sweep/mtbf<M>             , wall_us , tau_sim=.. young=.. ratio=..
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.sim import Simulator, TrainSim, TrainStepCost, v5e_unreliable
+from repro.train.ft_policy import FTPolicy, daly_interval, young_interval
+
+CFG = get_config("deepseek-67b")
+PODS = 2
+SEEDS = tuple(range(8))
+MTBFS = (150.0, 400.0, 1000.0)      # mean attempts between pod failures
+DELTA_STEPS = 2.0                   # checkpoint cost, in step times
+GRID = tuple(1.25 ** k for k in range(-3, 4))   # around Young's tau
+TOLERANCE = 0.25
+
+
+def _cost(board) -> TrainStepCost:
+    """A 7B-class training step on the board's chips; checkpoint and
+    restore bytes are sized so the save costs ``DELTA_STEPS`` steps of
+    HBM-roofline time (checkpoints go to slow persistent storage, not
+    HBM — the byte count models the slower path)."""
+    chip = board.machine.pod.chip
+    chips = board.machine.num_chips
+    base = TrainStepCost.from_params(7e9, tokens_per_batch=500_000,
+                                     chips=chips)
+    step_s = chip.compute_time_s(base.step_flops, base.step_bytes)
+    ckpt_bytes = DELTA_STEPS * step_s * chip.hbm_bw * chip.hbm_efficiency
+    return TrainStepCost(base.step_flops, base.step_bytes,
+                         ckpt_bytes=ckpt_bytes,
+                         restore_bytes=1.5 * ckpt_bytes)
+
+
+def _run(mtbf: float, interval: int, seed: int, num_steps: int) -> float:
+    board = v5e_unreliable(PODS, seed=seed,
+                           horizon=int(1.5 * num_steps) + 100,
+                           mtbf=mtbf, repair=(0, 0), nx=16, ny=16)
+    pol = FTPolicy(CFG, num_steps=num_steps, ckpt_interval=interval,
+                   pods=PODS,
+                   chips_per_pod=board.machine.pod.num_chips,
+                   dead_after_misses=1)
+    ts = TrainSim(cost=_cost(board), policy=pol,
+                  schedule=board.failure_schedule)
+    Simulator(board, ts).run_to_completion()
+    return ts.summary()["goodput"]
+
+
+def _refine(log_taus, goodputs, best: int) -> float:
+    """Parabolic refinement of the argmax in log-interval space (the
+    3-point vertex formula for unevenly spaced abscissae)."""
+    if best in (0, len(goodputs) - 1):
+        return math.exp(log_taus[best])
+    x0, x1, x2 = log_taus[best - 1:best + 2]
+    y0, y1, y2 = goodputs[best - 1:best + 2]
+    num = (x1 - x0) ** 2 * (y1 - y2) - (x1 - x2) ** 2 * (y1 - y0)
+    den = (x1 - x0) * (y1 - y2) - (x1 - x2) * (y1 - y0)
+    if den == 0:
+        return math.exp(x1)
+    x_star = x1 - 0.5 * num / den
+    lo, hi = min(x0, x2), max(x0, x2)
+    return math.exp(min(max(x_star, lo), hi))   # clamp to the bracket
+
+
+def run() -> None:
+    for mtbf in MTBFS:
+        num_steps = max(6000, int(10 * mtbf))
+        tau_y = young_interval(DELTA_STEPS, mtbf)   # in step units
+        intervals = sorted({max(2, int(round(tau_y * g))) for g in GRID})
+        goodputs = []
+        t_mtbf0 = time.perf_counter()
+        for iv in intervals:
+            t0 = time.perf_counter()
+            g = sum(_run(mtbf, iv, s, num_steps) for s in SEEDS) \
+                / len(SEEDS)
+            goodputs.append(g)
+            emit(f"ft_sweep/mtbf{int(mtbf)}/i{iv}",
+                 (time.perf_counter() - t0) * 1e6 / len(SEEDS),
+                 f"goodput={g:.4f}")
+        best = max(range(len(goodputs)), key=goodputs.__getitem__)
+        tau_sim = _refine([math.log(iv) for iv in intervals], goodputs,
+                          best)
+        tau_d = daly_interval(DELTA_STEPS, mtbf)
+        ratio = tau_sim / tau_y
+        ok = abs(ratio - 1.0) <= TOLERANCE \
+            or abs(tau_sim / tau_d - 1.0) <= TOLERANCE
+        emit(f"ft_sweep/mtbf{int(mtbf)}",
+             (time.perf_counter() - t_mtbf0) * 1e6,
+             f"tau_sim={tau_sim:.1f} young={tau_y:.1f} "
+             f"daly={tau_d:.1f} ratio={ratio:.2f} "
+             f"{'ok' if ok else 'OUTSIDE 25%'}")
+
+
+if __name__ == "__main__":
+    run()

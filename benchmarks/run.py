@@ -22,7 +22,7 @@ import traceback
 
 from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
                         distgem5_scaling, elastic_trace, fidelity_spectrum,
-                        kernel_throughput, roofline, sampled_sim,
+                        ft_sweep, kernel_throughput, roofline, sampled_sim,
                         serving_sweep)
 from benchmarks.common import rows_as_dict
 
@@ -34,6 +34,7 @@ BENCHES = [
     ("checkpoint_fork", checkpoint_fork.run),
     ("sampled_sim", sampled_sim.run),
     ("serving_sweep", serving_sweep.run),
+    ("ft_sweep", ft_sweep.run),
     ("kernel_throughput", kernel_throughput.run),
     ("dse_sweep", dse_sweep.run),
     ("roofline", roofline.run),

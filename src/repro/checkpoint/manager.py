@@ -48,6 +48,7 @@ class CheckpointManager:
         self.keep_n = keep_n
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         self.saves = 0
         self.save_seconds = 0.0
         os.makedirs(directory, exist_ok=True)
@@ -86,16 +87,30 @@ class CheckpointManager:
             self.save_seconds += time.perf_counter() - t0
 
         if self.async_save:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            def _write_async():
+                # a failed background save must not be silent: park the
+                # exception and re-raise it on the next wait()/save()
+                try:
+                    _write()
+                except BaseException as e:     # noqa: BLE001
+                    self._exc = e
+            self._thread = threading.Thread(target=_write_async,
+                                            daemon=True)
             self._thread.start()
         else:
             _write()
         return final
 
     def wait(self) -> None:
+        """Join the in-flight async save.  If it failed, the exception
+        is re-raised HERE (a silently-lost checkpoint would surface
+        only at restore time, after the data is already gone)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _prune(self) -> None:
         steps = self.available_steps()

@@ -13,29 +13,33 @@ Simulation"):
 
 from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
                               v5e_multipod, v5e_pod, v5e_serving,
-                              v5e_straggler)
+                              v5e_straggler, v5e_unreliable)
 from repro.sim.sampling import (SampledResult, SampledSimulation,
                                 SamplePlan, atomic_step_time_s, sampled_run)
 from repro.sim.serialize import (CHECKPOINT_VERSION, WORKLOAD_KEY,
-                                 CheckpointError, checkpoint_executor,
-                                 load_checkpoint, machine_from_dict,
-                                 restore_executor, save_checkpoint)
+                                 WORKLOAD_KIND_KEY, CheckpointError,
+                                 checkpoint_executor, load_checkpoint,
+                                 machine_from_dict, restore_executor,
+                                 save_checkpoint)
 from repro.sim.simulator import (ExitEvent, ExitEventType, Simulator,
                                  SteadyStateWorkload, repeat_trace)
 from repro.sim.workloads import (DynamicWorkload, ServeRequest, ServeSim,
-                                 ServingCost, poisson_requests,
-                                 trace_requests, uniform_requests)
+                                 ServingCost, TrainSim, TrainStepCost,
+                                 poisson_requests, trace_requests,
+                                 uniform_requests)
 
 __all__ = [
     "Board", "BOARDS", "get_board", "v5e_pod", "v5e_multipod",
-    "v5e_straggler", "v5e_degraded", "v5e_serving",
+    "v5e_straggler", "v5e_degraded", "v5e_serving", "v5e_unreliable",
     "Simulator", "ExitEvent", "ExitEventType", "SteadyStateWorkload",
     "repeat_trace",
     "DynamicWorkload", "ServeSim", "ServeRequest", "ServingCost",
+    "TrainSim", "TrainStepCost",
     "poisson_requests", "trace_requests", "uniform_requests",
     "SamplePlan", "SampledResult", "SampledSimulation", "sampled_run",
     "atomic_step_time_s",
-    "CHECKPOINT_VERSION", "WORKLOAD_KEY", "CheckpointError",
+    "CHECKPOINT_VERSION", "WORKLOAD_KEY", "WORKLOAD_KIND_KEY",
+    "CheckpointError",
     "checkpoint_executor", "save_checkpoint", "load_checkpoint",
     "restore_executor", "machine_from_dict",
 ]

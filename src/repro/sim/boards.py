@@ -35,12 +35,20 @@ from repro.core.desim.machine import ClusterModel
 
 @dataclass
 class Board:
-    """A machine plus the run-level knobs ``Simulator`` needs."""
+    """A machine plus the run-level knobs ``Simulator`` needs.
+
+    ``failure_schedule``: fault-injection boards (``v5e_unreliable``)
+    bundle a seeded :class:`repro.train.ft_policy.FailureSchedule`;
+    pass it to the workload (``TrainSim(schedule=board.
+    failure_schedule, ...)``) so one board name pins the whole
+    reproducible fault scenario.
+    """
 
     machine: ClusterModel
     algorithm: str = "torus2d"
     straggler_slowdowns: Optional[List[float]] = None
     name: str = "board"
+    failure_schedule: Optional[object] = None
 
     def instantiate(self) -> "Board":
         if not getattr(self.machine, "_frozen", False):
@@ -130,12 +138,36 @@ def v5e_serving(nx: int = 8, ny: int = 8, replicas: int = 1, *,
     return Board(m, name=f"v5e_serving_{replicas}x{nx}x{ny}")
 
 
+def v5e_unreliable(num_pods: int = 4, *, seed: int = 0,
+                   horizon: int = 2000, mtbf: float = 400.0,
+                   straggler_mtbs: float = 0.0,
+                   preemption_mtbs: float = 0.0,
+                   repair: tuple = (40, 120), nx: int = 16, ny: int = 16,
+                   chip: Optional[Dict] = None, ici: Optional[Dict] = None
+                   ) -> Board:
+    """An unreliable multipod: ``num_pods`` v5e pods plus a seeded
+    :class:`~repro.train.ft_policy.FailureSchedule` (MTBF-driven pod
+    failures, optional transient stragglers and preemptions, all in
+    step-attempt units over ``horizon`` attempts) — the fault-injected
+    training board for ``TrainSim``.  Quantum 0: the training workload
+    injects its op chain on one pod, so no quantum error model."""
+    from repro.train.ft_policy import FailureSchedule
+    m = _cluster("cluster", num_pods, 0, nx, ny, chip, ici, None)
+    sched = FailureSchedule.generate(
+        seed=seed, horizon=horizon, pods=num_pods, mtbf=mtbf,
+        straggler_mtbs=straggler_mtbs, preemption_mtbs=preemption_mtbs,
+        repair=repair)
+    return Board(m, failure_schedule=sched,
+                 name=f"v5e_unreliable_{num_pods}_s{seed}")
+
+
 BOARDS: Dict[str, Callable[..., Board]] = {
     "v5e_pod": v5e_pod,
     "v5e_multipod": v5e_multipod,
     "v5e_straggler": v5e_straggler,
     "v5e_degraded": v5e_degraded,
     "v5e_serving": v5e_serving,
+    "v5e_unreliable": v5e_unreliable,
 }
 
 

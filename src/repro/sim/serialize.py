@@ -43,6 +43,13 @@ CHECKPOINT_FORMAT = "repro.sim.checkpoint"
 # is additive, so the format version is unchanged.
 WORKLOAD_KEY = "workload"
 
+# optional sibling key naming the workload class the state belongs to
+# (``ServeSim``, ``TrainSim``, ...): restoring a TrainSim checkpoint
+# into a rebuilt ServeSim would otherwise fail deep inside
+# ``load_state_dict`` with an opaque KeyError.  Additive, like
+# WORKLOAD_KEY (older checkpoints without it restore unchecked).
+WORKLOAD_KIND_KEY = "workload_kind"
+
 
 class CheckpointError(RuntimeError):
     pass

@@ -41,6 +41,11 @@ Exit-event semantics:
 * ``SLO_VIOLATION`` — a dynamic serving workload finished a request
                      over its TTFT/latency SLO (``repro.sim.workloads.
                      ServeSim`` with ``exit_on_slo=True``).
+* ``POD_FAILED``   — a dynamic training workload declared a pod dead
+                     (``repro.sim.workloads.TrainSim`` with
+                     ``exit_on_fault=True``).
+* ``RESHARD``      — the training workload's FT policy replanned the
+                     elastic mesh (after a death or a rejoin).
 * ``DONE``         — the workload completed; ``result()`` is available.
 
 Dynamic workloads (``repro.sim.workloads.DynamicWorkload``) generate
@@ -72,6 +77,8 @@ class ExitEventType(enum.Enum):
     WORK_END = "work_end"
     SAMPLE_BEGIN = "sample_begin"
     SLO_VIOLATION = "slo_violation"
+    POD_FAILED = "pod_failed"
+    RESHARD = "reshard"
     DONE = "done"
 
 
@@ -216,6 +223,12 @@ class Simulator:
                 "checkpoint carries dynamic-workload state; pass the "
                 "rebuilt DynamicWorkload object (same request stream) "
                 "via workload=")
+        want_kind = ckpt.get(ser.WORKLOAD_KIND_KEY)
+        if want_kind is not None and isinstance(workload, DynamicWorkload) \
+                and type(workload).__name__ != want_kind:
+            raise ser.CheckpointError(
+                f"checkpoint carries {want_kind} state but a "
+                f"{type(workload).__name__} was passed via workload=")
         if workload is not None and ser.WORKLOAD_KEY not in ckpt:
             # a static checkpoint resumes its own serialized trace; a
             # passed workload would be silently ignored — refuse instead
@@ -280,7 +293,12 @@ class Simulator:
                       payload={"op_idx": idx, "start": start}))
 
     def _stop_check(self) -> bool:
-        return bool(self._marker_exits)
+        # pause the engine as soon as there is something to yield: a
+        # work-item marker, or a workload-raised exit (SLO violation,
+        # pod death, reshard) — exits must surface at the tick they
+        # happen, not after the run completes
+        return bool(self._marker_exits) or (
+            self._dyn is not None and bool(self._dyn.pending_exits))
 
     def _do_checkpoint(self, requested_tick: int) -> ExitEvent:
         self._ex.drain()
@@ -288,6 +306,7 @@ class Simulator:
         ckpt = ser.checkpoint_executor(self._ex)
         if self._dyn is not None:
             ckpt[ser.WORKLOAD_KEY] = self._dyn.state_dict()
+            ckpt[ser.WORKLOAD_KIND_KEY] = type(self._dyn).__name__
         self.last_checkpoint = ckpt
         path = None
         if self.checkpoint_dir:
@@ -335,15 +354,21 @@ class Simulator:
         any other exit event.
         """
         self._ensure_started()
-        stop = self._stop_check if self._has_markers else None
+        stop = (self._stop_check
+                if self._has_markers or self._dyn is not None else None)
         while True:
             if self._marker_exits:
                 yield self._marker_exits.popleft()
                 continue
             if self._dyn is not None and self._dyn.pending_exits:
                 e = self._dyn.pending_exits.popleft()
-                yield ExitEvent(ExitEventType.SLO_VIOLATION,
-                                tick=int(e["tick"]), cause=e["cause"],
+                # workloads tag their exits with a "kind" (POD_FAILED,
+                # RESHARD, ...); untagged entries are SLO violations
+                # (the original ServeSim contract)
+                kind = ExitEventType(
+                    e.get("kind", ExitEventType.SLO_VIOLATION.value))
+                yield ExitEvent(kind, tick=int(e["tick"]),
+                                cause=e["cause"],
                                 payload=dict(e.get("payload", {})))
                 continue
             if self._all_done():
@@ -364,14 +389,14 @@ class Simulator:
                 # advance to the workload's next external event, then
                 # let it react (submit arrivals, wake idle replicas)
                 self._ex.advance(max_tick=dyn_tick, stop_check=stop)
-                if self._marker_exits:
-                    continue
+                if self._stop_check():
+                    continue     # deliver first; poll on the next pass
                 self._dyn.poll(dyn_tick)
                 continue
             if sched_tick is not None:
                 tick, _, kind = self._scheduled[0]
                 self._ex.advance(max_tick=tick, stop_check=stop)
-                if self._marker_exits:
+                if self._stop_check():
                     continue                 # scheduled exit stays queued
                 if self._all_done():
                     # workload ended before the exit point: drop it
@@ -384,7 +409,7 @@ class Simulator:
                     yield ExitEvent(kind, tick=tick, cause="max tick")
             else:
                 finished = self._ex.advance(stop_check=stop)
-                if self._marker_exits:
+                if self._stop_check():
                     continue
                 if self._dyn is not None:
                     if (not self._dyn.done()

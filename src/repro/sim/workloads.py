@@ -7,8 +7,14 @@ frozen trace.  This module brings that to g5x: a
 into a live :class:`~repro.core.desim.executor.TraceExecutor` run
 (``inject_op``), driven by ``repro.sim.Simulator``'s exit-event loop.
 
-The flagship implementation is :class:`ServeSim`: request-level,
-vLLM-style continuous-batching LLM serving at pod scale.
+Two flagship implementations:
+
+* :class:`ServeSim` — request-level, vLLM-style continuous-batching
+  LLM serving at pod scale (below);
+* :class:`TrainSim` — fault-injected large-scale training: roofline-
+  costed steps under a seeded failure schedule, with recovery driven
+  by the pure ``repro.train.ft_policy.FTPolicy`` the real ``Trainer``
+  uses (see the class docstring at the bottom of this module).
 
 * **Arrivals are events** — open-loop (Poisson or a recorded trace of
   arrival times) or closed-loop (a fixed client population, each
@@ -41,7 +47,9 @@ bit-identically (tests/test_sim_checkpoint.py).
 
 from __future__ import annotations
 
+import hashlib
 import heapq
+import json
 import random
 from collections import deque
 from dataclasses import dataclass
@@ -51,6 +59,8 @@ from repro.core.desim.simnodes import TICKS_PER_S, to_ticks
 from repro.core.desim.trace import TraceOp
 from repro.core.simobject import Param, SimObject
 from repro.serve.policy import SlotScheduler
+from repro.train.ft_policy import (FailureSchedule, FTDecision, FTPolicy,
+                                   StepPlan)
 
 
 # ---------------------------------------------------------------------------
@@ -513,5 +523,311 @@ class ServeSim(SimObject, DynamicWorkload):
             rep.busy = bool(rd["busy"])
             rep.sched = SlotScheduler(self.slots, self.seq_capacity)
             rep.sched.load_state_dict(rd["sched"])
+        self.pending_exits = deque(dict(e) for e in d["pending_exits"])
+        self.stats.load_state_dict(d["stats"])
+
+
+# ---------------------------------------------------------------------------
+# training roofline cost model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainStepCost:
+    """Roofline cost of one training step (and its FT overheads).
+
+    All quantities are PER CHIP at full-fleet capacity; when the
+    elastic mesh shrinks to a fraction ``capacity`` of the chips, the
+    surviving chips each carry ``1/capacity`` of these (the sharded
+    work redistributes).  Per-op times come from the machine model's
+    ``compute_time_s`` roofline like every other op in the DES.
+    """
+
+    step_flops: float        # training-step FLOPs per chip (fwd+bwd)
+    step_bytes: float        # HBM bytes per chip per step
+    ckpt_bytes: float        # checkpoint write bytes per chip
+    restore_bytes: float = 0.0   # restore read + restart bytes per chip
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_hlo_cost(cls, step_cost, *, state_bytes: float,
+                      chips: int = 1, restore_factor: float = 1.5
+                      ) -> "TrainStepCost":
+        """From an analyzed compiled train step (a
+        ``repro.core.desim.hlo_cost.Cost``, already per-device) plus the
+        whole-model optimizer-state size.  ``restore_factor`` covers
+        restore read + re-init being slower than the write."""
+        per = state_bytes / max(chips, 1)
+        return cls(step_flops=step_cost.flops, step_bytes=step_cost.bytes,
+                   ckpt_bytes=per, restore_bytes=per * restore_factor)
+
+    @classmethod
+    def from_params(cls, num_params: float, *, tokens_per_batch: int,
+                    dtype_bytes: float = 2.0, optim_bytes: float = 12.0,
+                    chips: int = 1, restore_factor: float = 1.5
+                    ) -> "TrainStepCost":
+        """Analytic model: 6 flops per param per token (fwd+bwd),
+        ~3 weight passes of HBM traffic per step, and a checkpoint of
+        weights + optimizer state (``optim_bytes`` per param: fp32
+        master + two Adam moments by default).  ``restore_factor``
+        covers restore read + re-init being slower than the write."""
+        state = num_params * (dtype_bytes + optim_bytes) / max(chips, 1)
+        return cls(
+            step_flops=6.0 * num_params * tokens_per_batch / max(chips, 1),
+            step_bytes=3.0 * num_params * dtype_bytes / max(chips, 1),
+            ckpt_bytes=state, restore_bytes=restore_factor * state)
+
+
+# ---------------------------------------------------------------------------
+# TrainSim
+# ---------------------------------------------------------------------------
+
+class TrainSim(SimObject, DynamicWorkload):
+    """Fault-injected large-scale training on the event engine.
+
+    The training counterpart of :class:`ServeSim`: steps are injected
+    into the live run one at a time (``inject_op``), costed by the
+    :class:`TrainStepCost` roofline, and a seeded
+    :class:`~repro.train.ft_policy.FailureSchedule` drives
+    checkpoint / declare-dead / elastic-reshard decisions through the
+    *identical* pure :class:`~repro.train.ft_policy.FTPolicy` the real
+    ``Trainer.run_ft`` loop uses — so DES and real-trainer recovery
+    decision logs match exactly (tests/test_train_ft_policy.py).
+
+    Timeline model (one op chain on pod 0; the SPMD fleet is folded
+    into the per-chip roofline costs, scaled by the elastic mesh's
+    ``capacity``):
+
+    * a ``step`` attempt costs ``step_flops/bytes * slowdown /
+      capacity`` (stragglers slow the whole SPMD step);
+    * a checkpoint (cadence or preemption notice) costs
+      ``ckpt_bytes / capacity`` of HBM traffic;
+    * a ``stall`` attempt (a silent pod hangs the collective until the
+      policy declares it dead) costs one nominal step;
+    * a ``recover`` attempt costs ``restore_bytes / capacity``.
+
+    Pod deaths and mesh reshards surface as ``POD_FAILED`` / ``RESHARD``
+    exit events from ``Simulator.run()`` (``exit_on_fault``).
+    Checkpoint/restore of the *simulation* (``state_dict`` /
+    ``load_state_dict`` + the executor snapshot) is bit-identical even
+    mid-failure-recovery, like every other workload.
+    """
+
+    exit_on_fault = Param(bool, True,
+                          "surface pod deaths / reshards as exit events")
+
+    def __init__(self, name: str = "train", *, cost: TrainStepCost,
+                 policy: FTPolicy, schedule: FailureSchedule, **params):
+        super().__init__(name, **params)
+        self.cost = cost
+        self.policy = policy
+        self.schedule = schedule
+        self._ex = None
+        self._chip = None
+        self._started = False
+        self._phases: Deque[List[Any]] = deque()   # [tag, flops, bytes]
+        self._seq = 0
+        self._last_end = 0
+        self._done_steps = 0     # step ops COMPLETED, net of rollbacks
+        self.pending_exits: Deque[Dict[str, Any]] = deque()
+        s = self.stats
+        self.s_attempts = s.scalar("attempts", "step executions attempted")
+        self.s_steps = s.scalar("steps_done", "step executions completed")
+        self.s_stalls = s.scalar("stalls", "attempts hung on a silent pod")
+        self.s_failures = s.scalar("pods_dead", "pods declared dead")
+        self.s_preempts = s.scalar("preemptions", "pods preempted")
+        self.s_joins = s.scalar("pods_joined", "pods (re)joined")
+        self.s_stragglers = s.scalar("stragglers", "straggler episodes")
+        self.s_ckpts = s.scalar("checkpoints", "checkpoints written")
+        self.s_restores = s.scalar("restores", "checkpoint restores")
+        self.s_reshards = s.scalar("reshards", "elastic mesh reshards")
+        self.s_lost = s.scalar("lost_steps", "completed steps rolled back")
+        self.p_step = s.percentiles("step_time", "per-step sim time", "s")
+        s.formula("goodput", lambda: self.goodput())
+
+    # -- DynamicWorkload: lifecycle --------------------------------------
+    def bind(self, executor) -> None:
+        self._ex = executor
+        self._chip = executor.machine.pod.chip
+        executor.injection_hook = self._on_op_done
+
+    def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        for d in self.policy.start():
+            self._note(d, 0)
+        # the policy's initial checkpoint is a real (costed) write
+        self._phases.append(["ckpt", 0.0,
+                             self.cost.ckpt_bytes
+                             / max(self.policy.capacity(), 1e-9)])
+        self._advance_chain(0)
+
+    def next_event_tick(self) -> Optional[int]:
+        return None          # self-driving: completions trigger injection
+
+    def poll(self, tick: int) -> None:
+        pass
+
+    def done(self) -> bool:
+        return (self._started and self.policy.done()
+                and not self._phases)
+
+    # -- the training engine ---------------------------------------------
+    def _advance_chain(self, now: int) -> None:
+        while not self._phases and not self.policy.done():
+            plan = self.policy.execute_step(
+                self.schedule.events_at(self.policy.attempt))
+            self._account(plan)
+            for d in plan.decisions:
+                self._note(d, now)
+            self._plan_phases(plan)
+        if self._phases:
+            tag, fl, by = self._phases.popleft()
+            self._seq += 1
+            self._ex.inject_op(
+                TraceOp("compute", flops=fl, bytes=by,
+                        name=f"train/{tag}/{self._seq}"),
+                ready=int(now), pod=0)
+
+    def _plan_phases(self, plan: StepPlan) -> None:
+        cap = max(plan.capacity, 1e-9)
+        c = self.cost
+        if plan.pre_save is not None:
+            self._phases.append(["ckpt", 0.0, c.ckpt_bytes / cap])
+        if plan.kind == "step":
+            self._phases.append(["step", c.step_flops * plan.slowdown / cap,
+                                 c.step_bytes * plan.slowdown / cap])
+            if plan.post_save is not None:
+                self._phases.append(["ckpt", 0.0, c.ckpt_bytes / cap])
+        elif plan.kind == "stall":
+            # the collective hangs for one heartbeat (~one step time)
+            self._phases.append(["stall", c.step_flops / cap,
+                                 c.step_bytes / cap])
+        else:                                    # "recover"
+            self._phases.append(["restore", 0.0, c.restore_bytes / cap])
+
+    def _account(self, plan: StepPlan) -> None:
+        # "step" completions count in _on_op_done, so a mid-run stats
+        # snapshot never includes the in-flight step
+        self.s_attempts.inc()
+        if plan.kind == "stall":
+            self.s_stalls.inc()
+        elif plan.kind == "recover":
+            self.s_lost.inc(plan.lost_steps)
+            # the rolled-back steps all finished executing (ops run
+            # sequentially), so the completed counter rewinds exactly
+            self._done_steps -= plan.lost_steps
+
+    def _note(self, d: FTDecision, tick: int) -> None:
+        kind_stat = {"checkpoint": self.s_ckpts,
+                     "pod_dead": self.s_failures,
+                     "pod_joined": self.s_joins,
+                     "preempt": self.s_preempts,
+                     "straggler": self.s_stragglers,
+                     "restore": self.s_restores,
+                     "reshard": self.s_reshards}.get(d.kind)
+        if kind_stat is not None:
+            kind_stat.inc()
+        if not self.exit_on_fault:
+            return
+        if d.kind == "pod_dead":
+            self.pending_exits.append({
+                "tick": tick, "kind": "pod_failed",
+                "cause": f"pod {d.pod} dead at step {d.step} "
+                         f"(attempt {d.attempt})",
+                "payload": {"pod": d.pod, "step": d.step,
+                            "attempt": d.attempt, "note": d.note}})
+        elif d.kind == "reshard":
+            self.pending_exits.append({
+                "tick": tick, "kind": "reshard",
+                "cause": f"reshard to {'x'.join(map(str, d.mesh))} "
+                         f"({d.chips} chips) at step {d.step}",
+                "payload": {"mesh": list(d.mesh), "chips": d.chips,
+                            "step": d.step, "attempt": d.attempt}})
+
+    def _on_op_done(self, op: TraceOp, idx: int, pod: int, start: int,
+                    end: int) -> None:
+        name = op.name or ""
+        if not name.startswith("train/"):
+            return
+        self._last_end = max(self._last_end, end)
+        if name.split("/")[1] == "step":
+            self._done_steps += 1
+            self.s_steps.inc()
+            self.p_step.sample((end - start) / TICKS_PER_S)
+        self._advance_chain(end)
+
+    # -- results -----------------------------------------------------------
+    def ideal_step_s(self) -> float:
+        """Full-capacity fault-free step time on the bound machine."""
+        if self._chip is None:
+            raise RuntimeError("TrainSim not bound to an executor yet")
+        return self._chip.compute_time_s(self.cost.step_flops,
+                                         self.cost.step_bytes)
+
+    def goodput(self) -> float:
+        """Useful work over wall time: ``completed_steps *
+        ideal_step_time / makespan`` (1.0 = fault-free, full-capacity
+        perfection).  Counts *net* completed steps (rollbacks
+        subtract), so a mid-run read — a stats dump at a pause, a
+        checkpoint — is honest, not scaled to the full plan."""
+        if self._chip is None or self._last_end <= 0:
+            return 0.0
+        ideal = self._done_steps * self.ideal_step_s()
+        return ideal / (self._last_end / TICKS_PER_S)
+
+    def summary(self) -> Dict[str, float]:
+        """Training-run result row (the goodput frontier point)."""
+        return {
+            "steps": float(self.policy.num_steps),
+            "attempts": self.s_attempts.value(),
+            "makespan_s": self._last_end / TICKS_PER_S,
+            "ideal_step_s": self.ideal_step_s(),
+            "goodput": self.goodput(),
+            "pods_dead": self.s_failures.value(),
+            "stalls": self.s_stalls.value(),
+            "checkpoints": self.s_ckpts.value(),
+            "restores": self.s_restores.value(),
+            "reshards": self.s_reshards.value(),
+            "lost_steps": self.s_lost.value(),
+        }
+
+    # -- checkpointing -----------------------------------------------------
+    def _schedule_digest(self) -> str:
+        rows = [[e.attempt, e.kind, e.pod, e.slowdown, e.duration,
+                 e.repair] for e in self.schedule.events]
+        return hashlib.sha1(json.dumps(rows).encode()).hexdigest()[:16]
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "num_events": len(self.schedule.events),
+            "schedule_digest": self._schedule_digest(),
+            "started": self._started,
+            "seq": self._seq,
+            "last_end": self._last_end,
+            "done_steps": self._done_steps,
+            "phases": [list(p) for p in self._phases],
+            "policy": self.policy.state_dict(),
+            "pending_exits": [dict(e) for e in self.pending_exits],
+            "stats": self.stats.state_dict(),
+        }
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        mine = self._schedule_digest()
+        if int(d["num_events"]) != len(self.schedule.events) \
+                or d.get("schedule_digest", mine) != mine:
+            raise ValueError(
+                "checkpoint was taken under a different failure "
+                f"schedule ({d['num_events']} events, digest "
+                f"{d.get('schedule_digest')}) than this TrainSim's "
+                f"({len(self.schedule.events)} events, digest {mine}) "
+                "— rebuild with the same seed/params")
+        self._started = bool(d["started"])
+        self._seq = int(d["seq"])
+        self._last_end = int(d["last_end"])
+        self._done_steps = int(d.get("done_steps", 0))
+        self._phases = deque([p[0], float(p[1]), float(p[2])]
+                             for p in d["phases"])
+        self.policy.load_state_dict(d["policy"])
         self.pending_exits = deque(dict(e) for e in d["pending_exits"])
         self.stats.load_state_dict(d["stats"])

@@ -1,3 +1,42 @@
-from repro.train.step import (  # noqa: F401
-    TrainOptions, build_train_step, init_train_state, train_state_specs)
-from repro.train.trainer import Trainer  # noqa: F401
+"""Training: the real trainer loop and its pure fault-tolerance policy.
+
+The ft/ft_policy modules are deliberately jax-free — the DES
+(``repro.sim.workloads``) drives the identical ``FTPolicy`` the real
+``Trainer`` uses, and the simulator stack must stay importable (and
+fast to import) without jax.  The step/trainer modules *do* import
+jax, so they load lazily (PEP 562) on first attribute access instead
+of at package import — same pattern as ``repro.serve``.
+"""
+
+from repro.train.ft import (  # noqa: F401 (pure)
+    Heartbeat, MeshPlan, StragglerWatchdog, plan_elastic_mesh)
+from repro.train.ft_policy import (  # noqa: F401 (pure)
+    FailureEvent, FailureSchedule, FTDecision, FTPolicy, StepPlan,
+    checkpoint_due, daly_interval, young_interval)
+
+_LAZY = {
+    "TrainOptions": "repro.train.step",
+    "build_train_step": "repro.train.step",
+    "init_train_state": "repro.train.step",
+    "train_state_specs": "repro.train.step",
+    "Trainer": "repro.train.trainer",
+}
+
+__all__ = [
+    "Heartbeat", "MeshPlan", "StragglerWatchdog", "plan_elastic_mesh",
+    "FailureEvent", "FailureSchedule", "FTDecision", "FTPolicy",
+    "StepPlan", "checkpoint_due", "daly_interval", "young_interval",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -31,16 +31,31 @@ class StragglerWatchdog:
         self.flagged: List[Tuple[int, float]] = []
 
     def record(self, step: int, seconds: float) -> bool:
-        """Returns True if this step is a straggler."""
+        """Returns True if this step is a straggler.
+
+        Flagged samples are kept OUT of the rolling median window
+        (``self.times``): a burst of stragglers must not inflate the
+        median and desensitize later detection — with the old
+        behaviour, enough flagged steps raised the median until equally
+        slow steps stopped being flagged at all
+        (tests/test_checkpoint_ft.py regression).
+        """
         hist = self.times[-self.window:]
+        if len(hist) >= 4:
+            med = sorted(hist)[len(hist) // 2]
+            if seconds > self.threshold * med:
+                self.flagged.append((step, seconds))
+                return True
         self.times.append(seconds)
-        if len(hist) < 4:
-            return False
-        med = sorted(hist)[len(hist) // 2]
-        if seconds > self.threshold * med:
-            self.flagged.append((step, seconds))
-            return True
         return False
+
+    def reset_window(self) -> None:
+        """Forget the learned baseline after an *intended* regime
+        change (elastic reshard to fewer chips, hardware swap): every
+        step is legitimately slower now, and without a reset the frozen
+        old median would flag all of them forever.  The next 4 samples
+        re-learn the baseline unflagged (``record``'s warm-up)."""
+        self.times.clear()
 
     def median(self) -> float:
         if not self.times:

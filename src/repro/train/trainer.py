@@ -19,6 +19,8 @@ from repro.checkpoint import CheckpointManager
 from repro.core.simobject import Param, SimObject
 from repro.data.pipeline import SyntheticPipeline
 from repro.train.ft import Heartbeat, StragglerWatchdog
+from repro.train.ft_policy import (FailureSchedule, FTPolicy,
+                                   checkpoint_due)
 
 
 class SimulatedFailure(RuntimeError):
@@ -48,10 +50,31 @@ class Trainer(SimObject):
         self.s_steps = self.stats.scalar("steps", "steps completed")
         self.s_failures = self.stats.scalar("failures", "failures recovered")
         self.s_stragglers = self.stats.scalar("stragglers", "slow steps")
+        self.s_stalls = self.stats.scalar("stalls",
+                                          "attempts hung on a silent pod")
         self.s_step_time = self.stats.distribution("step_time", unit="s")
         self.history: list = []
 
     # ------------------------------------------------------------------
+    def _run_one_step(self, step: int) -> None:
+        """One real training step with all its bookkeeping (stats,
+        watchdog, history, heartbeat) — the single copy both ``run``
+        and ``run_ft`` execute."""
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in self.pipeline.batch(step).items()}
+        t0 = time.perf_counter()
+        self.state, metrics = self._jitted(self.state, batch)
+        loss = float(jax.device_get(metrics["loss"]))
+        dt = time.perf_counter() - t0
+        if self.watchdog.record(step, dt):
+            self.s_stragglers.inc()
+        self.s_step_time.sample(dt)
+        self.s_loss.set(loss)
+        self.s_steps.inc()
+        self.history.append({"step": step, "loss": loss, "time_s": dt})
+        if self.heartbeat:
+            self.heartbeat.beat(step)
+
     def run(self, num_steps: int,
             fail_at: Optional[Dict[int, Exception]] = None) -> Dict:
         """Run ``num_steps``; simulated failures trigger restore+retry."""
@@ -64,23 +87,9 @@ class Trainer(SimObject):
                 if step in fail_at:
                     exc = fail_at.pop(step)
                     raise exc
-                batch = {k: jax.numpy.asarray(v)
-                         for k, v in self.pipeline.batch(step).items()}
-                t0 = time.perf_counter()
-                self.state, metrics = self._jitted(self.state, batch)
-                loss = float(jax.device_get(metrics["loss"]))
-                dt = time.perf_counter() - t0
-                if self.watchdog.record(step, dt):
-                    self.s_stragglers.inc()
-                self.s_step_time.sample(dt)
-                self.s_loss.set(loss)
-                self.s_steps.inc()
-                self.history.append({"step": step, "loss": loss,
-                                     "time_s": dt})
-                if self.heartbeat:
-                    self.heartbeat.beat(step)
+                self._run_one_step(step)
                 step += 1
-                if self.ckpt and step % self.ckpt_interval == 0:
+                if self.ckpt and checkpoint_due(step, self.ckpt_interval):
                     self.ckpt.save(self.state, step)
             except SimulatedFailure:
                 self.s_failures.inc()
@@ -96,3 +105,55 @@ class Trainer(SimObject):
             self.ckpt.wait()
         return {"final_step": step, "history": self.history,
                 "stragglers": self.watchdog.flagged}
+
+    # ------------------------------------------------------------------
+    def run_ft(self, schedule: FailureSchedule, policy: FTPolicy) -> Dict:
+        """Run under a seeded :class:`FailureSchedule` with every
+        recovery decision delegated to the pure :class:`FTPolicy` — the
+        identical policy object the DES ``repro.sim.workloads.TrainSim``
+        drives, so the two produce the same decision log on the same
+        schedule (tests/test_train_ft_policy.py).
+
+        The trainer owns the side effects: it really runs the jitted
+        steps, really writes checkpoints through
+        :class:`CheckpointManager`, and on a declared pod death really
+        restores the policy's chosen checkpoint (onto the policy's
+        elastic mesh at pod scale; on this host the restore itself).
+        """
+        if self.ckpt is None:
+            raise ValueError("run_ft requires a CheckpointManager "
+                             "(construct the Trainer with ckpt_dir=)")
+        start = int(jax.device_get(self.state["step"]))
+        if start != policy.start_step:
+            raise ValueError(
+                f"state is at step {start}, policy starts at "
+                f"{policy.start_step}")
+        policy.start()
+        self.ckpt.save(self.state, policy.start_step)  # always restorable
+        while not policy.done():
+            plan = policy.execute_step(
+                schedule.events_at(policy.attempt))
+            if any(d.kind == "reshard" for d in plan.decisions):
+                # step times legitimately change with the mesh: the
+                # watchdog must re-learn its baseline, not flag every
+                # post-reshard step against the old capacity's median
+                self.watchdog.reset_window()
+            if plan.pre_save is not None:
+                # preemption notice: save before losing the pod
+                self.ckpt.save(self.state, plan.pre_save)
+            if plan.kind == "step":
+                self._run_one_step(plan.step)
+                if plan.post_save is not None:
+                    self.ckpt.save(self.state, plan.post_save)
+            elif plan.kind == "stall":
+                self.s_stalls.inc()     # collective hung on a silent pod
+            else:                       # "recover"
+                self.s_failures.inc()
+                self.ckpt.wait()        # surface async-save errors first
+                self.state = self.ckpt.restore(self.state,
+                                               step=plan.restore_to)
+        self.ckpt.wait()
+        final = int(jax.device_get(self.state["step"]))
+        return {"final_step": final, "attempts": policy.attempt,
+                "decisions": list(policy.decisions),
+                "history": self.history}

@@ -1,0 +1,61 @@
+"""Subprocess probe for tests/test_seed_determinism.py.
+
+Runs a short ServeSim and a short TrainSim from one seed and prints a
+JSON digest of everything that must be seed-deterministic: arrival
+streams, decision logs, percentile accumulator state, final ticks.
+Executed in a FRESH interpreter per invocation so Python hash
+randomization differs between runs — any iteration order leaking from
+an unordered container shows up as a digest mismatch.
+
+    python tests/_seed_probe.py <seed>
+"""
+
+import json
+import sys
+
+
+def serve_digest(seed: int):
+    from repro.sim import (ServeSim, ServingCost, Simulator,
+                           poisson_requests, v5e_serving)
+    reqs = poisson_requests(30, 200.0, seed=seed)
+    srv = ServeSim(cost=ServingCost.from_params(1e9, layers=4,
+                                                d_model=128, chips=16),
+                   requests=reqs, slots=3, seq_capacity=1024)
+    Simulator(v5e_serving(4, 4, replicas=2), srv).run_to_completion()
+    return {
+        "arrivals": [r.arrival_tick for r in reqs],
+        "decisions": [[d.kind, d.rid, d.slot, d.step, d.reason]
+                      for s in srv.schedulers for d in s.decisions],
+        "ttft_state": srv.p_ttft.state_dict(),
+        "latency_state": srv.p_latency.state_dict(),
+    }
+
+
+def train_digest(seed: int):
+    from repro.configs import get_config
+    from repro.sim import (Simulator, TrainSim, TrainStepCost,
+                           v5e_unreliable)
+    from repro.train.ft_policy import FTPolicy
+    board = v5e_unreliable(4, seed=seed, horizon=150, mtbf=30.0,
+                           straggler_mtbs=60.0, repair=(10, 30),
+                           nx=4, ny=4)
+    pol = FTPolicy(get_config("deepseek-67b"), num_steps=50,
+                   ckpt_interval=10, pods=4, chips_per_pod=16)
+    ts = TrainSim(
+        cost=TrainStepCost.from_params(1e9, tokens_per_batch=100_000,
+                                       chips=64),
+        policy=pol, schedule=board.failure_schedule)
+    Simulator(board, ts).run_to_completion()
+    return {
+        "events": [[e.attempt, e.kind, e.pod, e.slowdown, e.duration,
+                    e.repair] for e in board.failure_schedule.events],
+        "decisions": [d.to_row() for d in pol.decisions],
+        "final_tick": ts.summary()["makespan_s"],
+        "step_state": ts.p_step.state_dict(),
+    }
+
+
+if __name__ == "__main__":
+    seed = int(sys.argv[1])
+    json.dump({"serve": serve_digest(seed), "train": train_digest(seed)},
+              sys.stdout, sort_keys=True)

@@ -6,6 +6,19 @@ import jax
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite the golden stats dumps under tests/golden/ from "
+             "the current simulator output instead of diffing against "
+             "them (commit the result after reviewing the diff)")
+
+
+@pytest.fixture
+def regen_golden(request):
+    return request.config.getoption("--regen-golden")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

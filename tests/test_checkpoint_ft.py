@@ -7,8 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests need the dev extra
-from hypothesis import given, settings, strategies as st
+
+try:                        # property tests need the dev extra; the
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # rest of this module must still run
+    given = None
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import REGISTRY, get_config
@@ -55,6 +58,99 @@ def test_atomicity_tmp_never_visible(tmp_path):
     assert mgr.latest_step() == 3
 
 
+def test_async_save_exception_surfaces_on_wait(tmp_path, monkeypatch):
+    """A failed background save must re-raise on wait() (and clear, so
+    the manager stays usable) — silently losing a checkpoint would only
+    be discovered at restore time, after the data is gone."""
+    import repro.checkpoint.manager as mgr_mod
+
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(state_tree(0), 1)
+    mgr.wait()
+    real_save = mgr_mod.np.save
+    calls = {"n": 0}
+
+    def boom(*a, **kw):
+        calls["n"] += 1
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr_mod.np, "save", boom)
+    mgr.save(state_tree(1), 2)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    monkeypatch.setattr(mgr_mod.np, "save", real_save)
+    assert calls["n"] == 1
+    # the failed save never published; the manager still works
+    assert mgr.latest_step() == 1
+    mgr.save(state_tree(2), 3)
+    mgr.wait()
+    assert mgr.latest_step() == 3
+
+
+def test_async_save_exception_also_surfaces_on_next_save(tmp_path,
+                                                         monkeypatch):
+    import repro.checkpoint.manager as mgr_mod
+
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    monkeypatch.setattr(mgr_mod.np, "save",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            OSError("enospc")))
+    mgr.save(state_tree(0), 1)
+    with pytest.raises(OSError, match="enospc"):
+        mgr.save(state_tree(1), 2)      # save() waits for the previous
+
+
+def test_keep_n_pruning_under_back_to_back_async_saves(tmp_path):
+    """A rapid sequence of async saves (save() serializes on the
+    previous writer thread, so each write+prune fully lands before the
+    next begins) must converge to exactly the newest keep_n, with the
+    survivors readable."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=True)
+    for s in range(1, 7):
+        mgr.save(state_tree(s), s)
+    mgr.wait()
+    assert mgr.available_steps() == [5, 6]
+    restored = mgr.restore(state_tree(6))
+    for a, b in zip(jax.tree.leaves(state_tree(6)),
+                    jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_skips_corrupt_newest_checkpoint(tmp_path):
+    """A newest checkpoint with no manifest (crash before the atomic
+    publish completed its contents) is invisible: latest_step() falls
+    back to the previous step and restore works."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    st1 = state_tree(1)
+    mgr.save(st1, 1)
+    mgr.save(state_tree(2), 2)
+    os.remove(os.path.join(str(tmp_path), "step_00000002",
+                           "manifest.json"))
+    assert mgr.latest_step() == 1
+    restored = mgr.restore(st1)          # restores step 1, not the husk
+    for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_of_partially_corrupt_newest_raises_cleanly(tmp_path):
+    """A manifest that names a missing/truncated leaf file fails the
+    restore of THAT step with a real error (not garbage data), while
+    an explicit restore of the previous step still succeeds."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    st_ = state_tree()
+    mgr.save(st_, 1)
+    mgr.save(st_, 2)
+    victim = os.path.join(str(tmp_path), "step_00000002",
+                          "params__w.npy")
+    with open(victim, "wb") as f:
+        f.write(b"\x93NUMPY garbage")
+    with pytest.raises(Exception):
+        mgr.restore(st_, step=2)
+    restored = mgr.restore(st_, step=1)
+    for a, b in zip(jax.tree.leaves(st_), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_restore_with_dtype_cast(tmp_path):
     """Resharding restore path: restore into bf16 target specs."""
     mgr = CheckpointManager(str(tmp_path), async_save=False)
@@ -73,6 +169,30 @@ def test_watchdog_flags_stragglers():
         assert not wd.record(i, 1.0)
     assert wd.record(10, 5.0)
     assert wd.flagged == [(10, 5.0)]
+
+
+def test_watchdog_median_not_inflated_by_stragglers():
+    """Regression: flagged straggler steps used to enter the rolling
+    median window, so a burst of slow steps inflated the median until
+    equally slow steps stopped being flagged.  Flagged samples must
+    stay OUT of the window: detection stays sharp through a long burst,
+    and the reported median stays at the healthy baseline."""
+    wd = StragglerWatchdog(threshold=2.0, window=8)
+    for i in range(8):
+        assert not wd.record(i, 1.0)
+    for i in range(8, 28):               # a 20-step straggler burst
+        assert wd.record(i, 5.0), f"step {i} not flagged: median crept up"
+    assert len(wd.flagged) == 20
+    assert wd.median() == 1.0            # baseline, not the burst
+    # healthy steps afterwards are still clean
+    assert not wd.record(28, 1.1)
+    # an INTENDED regime change (elastic reshard to fewer chips) resets
+    # the window: the slower steps become the new unflagged baseline
+    wd.reset_window()
+    for i in range(29, 37):
+        assert not wd.record(i, 4.0)     # warm-up + new median
+    assert wd.median() == 4.0
+    assert wd.record(37, 9.0)            # detection works at the new scale
 
 
 def test_heartbeat(tmp_path):
@@ -107,9 +227,7 @@ def test_heartbeat_age_is_monotonic_and_survives_clock_steps(tmp_path):
     assert hb.age() == 0.0
 
 
-@given(st.integers(1, 600))
-@settings(max_examples=40, deadline=None)
-def test_elastic_planner_properties(chips):
+def _elastic_planner_props(chips):
     """For every arch and surviving-chip count: plan is valid."""
     for arch in ("deepseek-67b", "minicpm-2b", "whisper-small"):
         cfg = get_config(arch)
@@ -118,6 +236,18 @@ def test_elastic_planner_properties(chips):
         assert plan.chips == data * model <= chips
         assert cfg.d_ff % model == 0
         assert cfg.d_model % data == 0
+
+
+if given is not None:
+    @given(st.integers(1, 600))
+    @settings(max_examples=40, deadline=None)
+    def test_elastic_planner_properties(chips):
+        _elastic_planner_props(chips)
+else:
+    @pytest.mark.parametrize("chips", [1, 2, 7, 16, 63, 255, 256, 600])
+    def test_elastic_planner_properties(chips):
+        # hypothesis not installed: a fixed boundary sweep stands in
+        _elastic_planner_props(chips)
 
 
 def test_elastic_planner_prefers_big_mesh():

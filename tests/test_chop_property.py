@@ -1,0 +1,87 @@
+"""Property test (MGSim-style deterministic-replay validation): chopping
+a run into ARBITRARY ``advance(max_tick)`` pauses and checkpoint-restore
+round trips must be invisible — the final tick and the full stats tree
+are bit-identical to an uninterrupted run, for any cut placement
+hypothesis can dream up."""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
+from hypothesis import given, settings, strategies as st
+
+from repro.core.desim.simnodes import TICKS_PER_S
+from repro.core.desim.trace import analytic_trace
+from repro.sim import ExitEventType, Simulator, v5e_multipod, v5e_pod
+
+COLLS = [{"kind": "all-reduce", "bytes": 5e7, "participants": 256}]
+DCN_TAIL = [{"kind": "all-reduce", "bytes": 2e8, "participants": 512,
+             "scope": "dcn"}]
+
+
+def _trace(pods):
+    return analytic_trace("chop", 5, 5e11, 5e8, COLLS,
+                          tail_collectives=DCN_TAIL if pods > 1 else ())
+
+
+def _board(pods):
+    return v5e_pod() if pods == 1 else v5e_multipod(pods)
+
+
+def _reference(pods):
+    sim = Simulator(_board(pods), _trace(pods), record_stats=True)
+    res = sim.run_to_completion()
+    return res.makespan_s, res.stats
+
+
+# cuts: up to 6 fractions of the makespan, each either a plain pause
+# (advance to tick, yield MAX_TICK) or a full drain-serialize-restore
+# checkpoint; duplicates and unsorted draws are part of the property
+@given(cuts=st.lists(
+    st.tuples(st.floats(0.01, 0.99), st.booleans()),
+    min_size=1, max_size=6),
+    pods=st.sampled_from([1, 2]))
+@settings(max_examples=12, deadline=None)
+def test_chopped_run_is_bit_identical(cuts, pods):
+    ref_makespan, ref_stats = _reference(pods)
+    horizon = ref_makespan * TICKS_PER_S
+    sim = Simulator(_board(pods), _trace(pods), record_stats=True)
+    for frac, is_ckpt in cuts:
+        tick = int(horizon * frac)
+        if is_ckpt:
+            sim.schedule_checkpoint(tick)   # drain+serialize+restore
+        else:
+            sim.schedule_max_tick(tick)     # plain pause
+    n_exits = 0
+    for ev in sim.run():
+        n_exits += 1
+        if ev.kind is ExitEventType.DONE:
+            break
+    res = sim.result()
+    assert res.makespan_s == ref_makespan
+    assert res.stats == ref_stats
+    # every cut really fired (fracs are all < 1, so every scheduled
+    # exit lands before the end of the run): cuts + DONE
+    assert n_exits == len(cuts) + 1
+
+
+@given(fracs=st.lists(st.floats(0.05, 0.95), min_size=1, max_size=4))
+@settings(max_examples=10, deadline=None)
+def test_chained_checkpoint_files_round_trip(fracs, tmp_path_factory):
+    """Serializing at every cut *through a JSON file* and resuming from
+    the last file still lands on the reference result."""
+    from repro.sim import Simulator as S
+    ref_makespan, ref_stats = _reference(2)
+    tmp = tmp_path_factory.mktemp("chain")
+    sim = S(_board(2), _trace(2), record_stats=True,
+            checkpoint_dir=str(tmp))
+    for f in sorted(fracs):
+        sim.schedule_checkpoint(int(ref_makespan * TICKS_PER_S * f))
+    for ev in sim.run():
+        if ev.kind is ExitEventType.CHECKPOINT:
+            continue
+    paths = sim.checkpoint_paths
+    assert len(paths) >= 1
+    resumed = S.from_checkpoint(paths[-1])
+    res = resumed.run_to_completion()
+    assert res.makespan_s == ref_makespan
+    assert res.stats == ref_stats

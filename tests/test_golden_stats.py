@@ -1,0 +1,111 @@
+"""Golden-stats regression tier (gem5's nightly golden-output tests).
+
+gem5's regression suite diffs each run's ``stats.txt`` against a
+committed golden copy: any timing change — intended or not — shows up
+as a stats diff that a human must bless.  This reproduces that tier
+for three canonical board x trace runs: the full gem5-style stats dump
+(plus the final tick and event count, the two values every timing bug
+perturbs first) is rendered to text and diffed line-by-line against
+``tests/golden/<name>.txt``.
+
+Updating a golden (after an *intended* timing change)::
+
+    python -m pytest tests/test_golden_stats.py --regen-golden
+    git diff tests/golden/        # review every changed line!
+
+Run this tier alone with ``tools/ci.sh golden``.
+"""
+
+import difflib
+import os
+
+import pytest
+
+from repro.core.desim.simnodes import TICKS_PER_S
+from repro.core.desim.trace import analytic_trace
+from repro.sim import Simulator, v5e_multipod, v5e_pod, v5e_straggler
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+DCN_TAIL = [{"kind": "all-reduce", "bytes": 1e9, "participants": 512,
+             "scope": "dcn"}]
+
+
+def _mixed_trace(tail=False):
+    """A deterministic, code-defined trace: compute + torus collectives
+    per layer, optionally a cross-pod DCN tail (exercises QuantumSync)."""
+    return analytic_trace("golden", 6, 1e12, 1e9, COLLS,
+                          tail_collectives=DCN_TAIL if tail else ())
+
+
+# name -> (board builder, trace builder); three canonical runs covering
+# the single-pod torus, the multipod DCN/quantum path, and straggler
+# injection
+CASES = {
+    "pod_torus": (lambda: v5e_pod(), lambda: _mixed_trace()),
+    "multipod_dcn": (lambda: v5e_multipod(2), lambda: _mixed_trace(True)),
+    "straggler": (lambda: v5e_straggler(2, 2.0),
+                  lambda: _mixed_trace(True)),
+}
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.12g}"          # stable text for accumulated floats
+    if isinstance(v, list):
+        return "[" + ", ".join(_fmt(x) for x in v) + "]"
+    if isinstance(v, dict):         # distribution stats render as dicts
+        return "{" + ", ".join(f"{k!r}: {_fmt(x)}"
+                               for k, x in v.items()) + "}"
+    return str(v)
+
+
+def _render(name: str) -> str:
+    board_fn, trace_fn = CASES[name]
+    board = board_fn()
+    sim = Simulator(board, trace_fn(), record_stats=True)
+    res = sim.run_to_completion()
+    lines = [f"case: {name}",
+             f"board: {board.name}",
+             f"final_tick: {int(round(res.makespan_s * TICKS_PER_S))}",
+             f"events: {res.events}",
+             "---------- Begin Simulation Statistics ----------"]
+    for k, v in sorted(res.stats.items()):
+        lines.append(f"{k:<48} {_fmt(v)}")
+    lines.append("---------- End Simulation Statistics ----------")
+    return "\n".join(lines) + "\n"
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_stats(name, regen_golden):
+    got = _render(name)
+    path = os.path.join(GOLDEN_DIR, f"{name}.txt")
+    if regen_golden:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(got)
+        pytest.skip(f"regenerated {path}")
+    if not os.path.exists(path):
+        pytest.fail(f"missing golden file {path}; run "
+                    f"`python -m pytest {__file__} --regen-golden` "
+                    "and commit the result")
+    with open(path) as f:
+        want = f.read()
+    if got != want:
+        diff = "\n".join(difflib.unified_diff(
+            want.splitlines(), got.splitlines(),
+            fromfile=f"golden/{name}.txt (committed)",
+            tofile=f"{name} (this run)", lineterm=""))
+        pytest.fail(
+            f"stats for {name!r} diverged from the committed golden "
+            f"dump.\nIf this timing change is INTENDED, regenerate with "
+            f"--regen-golden and commit; otherwise it is a regression.\n"
+            f"{diff}")
+
+
+def test_render_is_deterministic():
+    """The rendering itself is stable within one process — a flaky
+    golden tier would train everyone to ignore it."""
+    name = sorted(CASES)[0]
+    assert _render(name) == _render(name)

@@ -1,0 +1,329 @@
+"""The headline fault-tolerance test: the real ``Trainer`` FT stack
+(jitted steps, CheckpointManager writes/restores on disk) and the DES
+``TrainSim`` make *identical* recovery decisions (checkpoint cadence,
+pod-death declarations, elastic reshards, restore targets) on the same
+seeded failure schedule — because both drive the same pure
+``repro.train.ft_policy.FTPolicy``.  Plus unit coverage of the policy
+state machine and the TrainSim mid-recovery checkpoint identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.desim.simnodes import TICKS_PER_S
+from repro.sim import (ExitEventType, Simulator, TrainSim, TrainStepCost,
+                       v5e_unreliable)
+from repro.train.ft_policy import (FailureEvent, FailureSchedule, FTPolicy,
+                                   checkpoint_due, daly_interval,
+                                   young_interval)
+from repro.train.trainer import Trainer
+
+CFG = get_config("deepseek-67b")
+PODS, CHIPS_PER_POD = 4, 16
+
+
+def _policy(num_steps=60, ckpt_interval=10, **kw):
+    return FTPolicy(CFG, num_steps=num_steps, ckpt_interval=ckpt_interval,
+                    pods=PODS, chips_per_pod=CHIPS_PER_POD, **kw)
+
+
+def _schedule(seed, horizon=200):
+    return FailureSchedule.generate(
+        seed=seed, horizon=horizon, pods=PODS, mtbf=40.0,
+        straggler_mtbs=60.0, preemption_mtbs=150.0, repair=(10, 40))
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests
+# ---------------------------------------------------------------------------
+
+def _drive(policy, schedule):
+    policy.start()
+    plans = []
+    while not policy.done():
+        plans.append(policy.execute_step(
+            schedule.events_at(policy.attempt)))
+    return plans
+
+
+def test_cadence_and_final_checkpoint():
+    pol = _policy(num_steps=25, ckpt_interval=10)
+    plans = _drive(pol, FailureSchedule((), pods=PODS))
+    saves = [p.post_save for p in plans if p.post_save is not None]
+    assert saves == [10, 20, 25]            # cadence + final state
+    assert all(p.kind == "step" for p in plans)
+    assert checkpoint_due(10, 10) and not checkpoint_due(5, 10)
+    assert not checkpoint_due(0, 10)        # the initial save is start()
+
+
+def test_failure_stall_declare_restore():
+    sched = FailureSchedule(
+        (FailureEvent(5, "pod_failed", pod=2, repair=10),), pods=PODS)
+    pol = _policy(num_steps=20, ckpt_interval=4, dead_after_misses=3)
+    plans = _drive(pol, sched)
+    kinds = [p.kind for p in plans]
+    # attempt 5 + 6 stall (misses 1, 2); attempt 7 declares and recovers
+    assert kinds[5] == kinds[6] == "stall"
+    assert plans[7].kind == "recover" and plans[7].restore_to == 4
+    assert plans[7].lost_steps == 1         # step 4 done, step 5 lost
+    dead = [d for d in pol.decisions if d.kind == "pod_dead"]
+    assert [d.pod for d in dead] == [2]
+    # the mesh shrank to the 3 surviving pods, then grew back on repair
+    reshards = [d for d in pol.decisions if d.kind == "reshard"]
+    assert len(reshards) == 2
+    assert reshards[0].chips < reshards[1].chips
+    assert pol.step == 20 and pol.done()
+
+
+def test_preemption_saves_before_losing_the_pod():
+    sched = FailureSchedule(
+        (FailureEvent(3, "preemption", pod=1, repair=8),), pods=PODS)
+    pol = _policy(num_steps=12, ckpt_interval=100)
+    plans = _drive(pol, sched)
+    assert plans[3].pre_save == 3           # notice -> proactive save
+    assert all(p.kind != "recover" for p in plans)   # no work lost
+    kinds = [d.kind for d in pol.decisions if d.attempt == 3]
+    assert kinds == ["preempt", "checkpoint", "pod_dead", "reshard"]
+
+
+def test_straggler_slows_but_does_not_roll_back():
+    sched = FailureSchedule(
+        (FailureEvent(2, "straggler", pod=0, slowdown=3.0, duration=4),),
+        pods=PODS)
+    pol = _policy(num_steps=10, ckpt_interval=100)
+    plans = _drive(pol, sched)
+    assert [p.slowdown for p in plans[2:6]] == [3.0] * 4
+    assert plans[6].slowdown == 1.0
+    assert all(p.kind == "step" for p in plans)
+
+
+def test_straggler_does_not_outlive_its_pod():
+    """Regression: a straggler slowdown is a property of the slow
+    hardware — when that pod dies and is replaced, the replacement
+    must not inherit the slowdown."""
+    sched = FailureSchedule(
+        (FailureEvent(2, "straggler", pod=0, slowdown=3.0, duration=8),
+         FailureEvent(3, "pod_failed", pod=0, repair=0)), pods=PODS)
+    pol = _policy(num_steps=12, ckpt_interval=100, dead_after_misses=1)
+    plans = _drive(pol, sched)
+    assert plans[2].slowdown == 3.0          # straggling while alive
+    assert plans[3].kind == "recover"        # replaced immediately
+    assert all(p.slowdown == 1.0 for p in plans[4:])
+
+
+def test_policy_state_dict_round_trip():
+    import json
+    sched = _schedule(9)
+    pol = _policy()
+    pol.start()
+    for _ in range(25):
+        pol.execute_step(sched.events_at(pol.attempt))
+    state = json.loads(json.dumps(pol.state_dict()))
+    pol2 = _policy()
+    pol2.start()
+    pol2.load_state_dict(state)
+    while not pol.done():
+        pol.execute_step(sched.events_at(pol.attempt))
+        pol2.execute_step(sched.events_at(pol2.attempt))
+    assert pol2.decisions == pol.decisions
+
+
+def test_schedule_seeded_and_indexed():
+    a, b = _schedule(1), _schedule(1)
+    assert a.events == b.events
+    assert a.events != _schedule(2).events
+    by_hand = [ev for ev in a.events if ev.attempt == a.events[0].attempt]
+    assert list(a.events_at(a.events[0].attempt)) == by_hand
+
+
+def test_young_daly_formulas():
+    assert young_interval(10.0, 2000.0) == pytest.approx(200.0)
+    assert daly_interval(10.0, 2000.0) == pytest.approx(190.0)
+
+
+# ---------------------------------------------------------------------------
+# the real trainer vs the DES (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+class _TinyPipeline:
+    """Duck-typed pipeline: deterministic per-step batches, no config."""
+
+    def batch(self, step):
+        return {"x": np.full((4,), float(step % 7), np.float32)}
+
+
+def _tiny_train_step(state, batch):
+    params = state["params"] * 0.9 + 0.01 * jnp.sum(batch["x"])
+    return ({"params": params, "step": state["step"] + 1},
+            {"loss": jnp.sum(params ** 2)})
+
+
+def _tiny_state():
+    return {"params": jnp.ones((4,), jnp.float32),
+            "step": jnp.asarray(0, jnp.int32)}
+
+
+def _train_cost():
+    return TrainStepCost.from_params(
+        1e9, tokens_per_batch=100_000, chips=PODS * CHIPS_PER_POD)
+
+
+@pytest.mark.parametrize("seed", [7, 21, 1234])
+def test_trainer_and_trainsim_decide_identically(seed, tmp_path):
+    sched = _schedule(seed)
+
+    # the real FT stack: jitted steps + on-disk checkpoint/restore
+    tr = Trainer(model=None, train_step=_tiny_train_step,
+                 pipeline=_TinyPipeline(), state=_tiny_state(),
+                 ckpt_dir=str(tmp_path / f"ckpt{seed}"))
+    tr.instantiate()
+    real_pol = _policy()
+    res = tr.run_ft(sched, real_pol)
+    assert res["final_step"] == 60          # it really recovered
+
+    # the DES co-simulation of the same schedule
+    board = v5e_unreliable(PODS, seed=0, mtbf=0.0, nx=4, ny=4)
+    sim_pol = _policy()
+    ts = TrainSim(cost=_train_cost(), policy=sim_pol, schedule=sched)
+    Simulator(board, ts).run_to_completion()
+
+    assert real_pol.decisions == sim_pol.decisions   # the whole point
+    assert res["decisions"] == sim_pol.decisions
+
+
+def test_trainer_restores_through_real_checkpoints(tmp_path):
+    """The decisions drive *real* restores: after a rollback the state
+    really rewinds (history shows re-run steps) and ends at num_steps."""
+    sched = FailureSchedule(
+        (FailureEvent(15, "pod_failed", pod=1, repair=0),), pods=PODS)
+    tr = Trainer(model=None, train_step=_tiny_train_step,
+                 pipeline=_TinyPipeline(), state=_tiny_state(),
+                 ckpt_dir=str(tmp_path))
+    tr.instantiate()
+    pol = _policy(num_steps=30, ckpt_interval=10)
+    res = tr.run_ft(sched, pol)
+    steps_run = [h["step"] for h in res["history"]]
+    assert steps_run.count(14) == 2         # step 14 ran, was lost, re-ran
+    assert res["final_step"] == 30
+    assert tr.s_failures.value() == 1 and tr.s_stalls.value() >= 1
+    # the run ends with a checkpoint of the final state on disk
+    assert tr.ckpt.latest_step() == 30
+
+
+def test_trainsim_exit_events_and_goodput():
+    board = v5e_unreliable(PODS, seed=11, horizon=200, mtbf=50.0,
+                           repair=(10, 30), nx=4, ny=4)
+    pol = _policy()
+    ts = TrainSim(cost=_train_cost(), policy=pol,
+                  schedule=board.failure_schedule)
+    sim = Simulator(board, ts)
+    kinds = [ev.kind for ev in sim.run()]
+    assert ExitEventType.POD_FAILED in kinds
+    assert ExitEventType.RESHARD in kinds
+    assert kinds[-1] is ExitEventType.DONE
+    s = ts.summary()
+    assert 0.0 < s["goodput"] < 1.0         # faults cost, but it finished
+    assert s["restores"] == ts.s_failures.value() >= 1
+
+
+def test_pod_failed_exit_fires_at_the_failure_not_at_the_end():
+    """Exit events are reactive hooks: a POD_FAILED must yield while
+    the run is still in flight (so the driver can checkpoint, stop, or
+    rescope), not be batched up until DONE."""
+    board = v5e_unreliable(PODS, seed=11, horizon=200, mtbf=50.0,
+                           repair=(10, 30), nx=4, ny=4)
+    pol = _policy()
+    ts = TrainSim(cost=_train_cost(), policy=pol,
+                  schedule=board.failure_schedule)
+    sim = Simulator(board, ts)
+    for ev in sim.run():
+        if ev.kind is ExitEventType.POD_FAILED:
+            break
+    assert not pol.done()                   # the run is still in flight
+    first_dead = next(d for d in pol.decisions if d.kind == "pod_dead")
+    assert pol.attempt <= first_dead.attempt + 2    # and near the fault
+    # mid-run goodput is a real fraction, not scaled to the full plan
+    assert 0.0 < ts.goodput() <= 1.0 + 1e-9
+
+
+def test_trainsim_rejects_checkpoint_from_different_schedule():
+    """Same event COUNT but a different seed must still be refused —
+    the digest, not just the length, guards the restore."""
+    def mk(seed):
+        board = v5e_unreliable(PODS, seed=seed, horizon=200, mtbf=50.0,
+                               repair=(10, 30), nx=4, ny=4)
+        pol = _policy()
+        return board, TrainSim(cost=_train_cost(), policy=pol,
+                               schedule=board.failure_schedule)
+
+    board, ts = mk(11)
+    sim = Simulator(board, ts)
+    ckpt = sim.save_checkpoint()
+    # find another seed with the same number of events
+    n = len(board.failure_schedule.events)
+    other = None
+    for seed in range(100, 200):
+        b2, t2 = mk(seed)
+        if len(b2.failure_schedule.events) == n \
+                and b2.failure_schedule.events \
+                != board.failure_schedule.events:
+            other = t2
+            break
+    assert other is not None
+    with pytest.raises(Exception, match="different failure schedule"):
+        Simulator.from_checkpoint(ckpt, workload=other)
+
+
+@pytest.mark.parametrize("frac", [0.35, 0.6, 0.85])
+def test_trainsim_checkpoint_restores_bit_identically(frac, tmp_path):
+    """A TrainSim checkpoint — including one taken mid-failure-recovery
+    — restores bit-identically: final tick, stats tree, decision log."""
+    def build():
+        board = v5e_unreliable(PODS, seed=5, horizon=300, mtbf=35.0,
+                               straggler_mtbs=80.0, repair=(10, 40),
+                               nx=4, ny=4)
+        pol = _policy(num_steps=80, ckpt_interval=10)
+        ts = TrainSim(cost=_train_cost(), policy=pol,
+                      schedule=board.failure_schedule)
+        return board, ts
+
+    board, ref = build()
+    res_ref = Simulator(board, ref).run_to_completion()
+    assert ref.s_failures.value() >= 2      # the schedule really bites
+
+    board2, ts2 = build()
+    sim2 = Simulator(board2, ts2, checkpoint_dir=str(tmp_path))
+    tick = int(res_ref.makespan_s * TICKS_PER_S * frac)
+    sim2.schedule_checkpoint(tick)
+    path = None
+    for ev in sim2.run():
+        if ev.kind is ExitEventType.CHECKPOINT:
+            path = ev.payload["path"]
+            break
+    assert path is not None
+
+    board3, fresh = build()
+    sim3 = Simulator.from_checkpoint(path, workload=fresh)
+    res3 = sim3.run_to_completion()
+    assert res3.makespan_s == res_ref.makespan_s      # identical final tick
+    assert res3.stats == res_ref.stats                # identical stats tree
+    assert fresh.policy.decisions == ref.policy.decisions
+    assert fresh.stats.state_dict() == ref.stats.state_dict()
+
+
+def test_trainsim_checkpoint_rejects_wrong_workload(tmp_path):
+    from repro.sim import CheckpointError, ServeRequest, ServeSim, ServingCost
+    board = v5e_unreliable(2, seed=1, mtbf=0.0, nx=4, ny=4)
+    pol = FTPolicy(CFG, num_steps=5, ckpt_interval=5, pods=2,
+                   chips_per_pod=16)
+    ts = TrainSim(cost=_train_cost(), policy=pol,
+                  schedule=board.failure_schedule)
+    sim = Simulator(board, ts)
+    ckpt = sim.save_checkpoint()
+    other = ServeSim(cost=ServingCost.from_params(1e9, layers=4,
+                                                  d_model=128),
+                     requests=[ServeRequest(0, 8, 4)])
+    with pytest.raises(CheckpointError, match="TrainSim"):
+        Simulator.from_checkpoint(ckpt, workload=other)

@@ -12,9 +12,21 @@
 #                            # run, asserts nonzero goodput + stats), and
 #                            # `python -m benchmarks.run --json fidelity`
 #                            # (writes BENCH_desim.json)
+#   tools/ci.sh golden       # gem5-style golden-stats regression tier:
+#                            # diffs live stats dumps of the canonical
+#                            # board x trace runs against the committed
+#                            # tests/golden/*.txt (regen with
+#                            # `pytest tests/test_golden_stats.py
+#                            #  --regen-golden`, then review + commit)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "${1-}" = "golden" ]; then
+  shift
+  python -m pytest -q tests/test_golden_stats.py "$@"
+  echo "golden tier OK"
+  exit 0
+fi
 if [ "${1-}" = "smoke" ]; then
   shift
   python examples/quickstart.py
