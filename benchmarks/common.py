@@ -20,6 +20,17 @@ def rows_as_dict() -> Dict[str, Dict[str, object]]:
             for name, us, derived in ROWS}
 
 
+def fidelity_from_argv(argv: List[str]) -> str:
+    """Parse the sweeps' shared ``--fidelity {atomic,detailed}`` flag
+    (default: atomic — the fast outer-sweep model)."""
+    if "--fidelity" in argv:
+        i = argv.index("--fidelity")
+        if i + 1 >= len(argv):
+            raise SystemExit("--fidelity needs a value: atomic | detailed")
+        return argv[i + 1]
+    return "atomic"
+
+
 def time_us(fn: Callable, iters: int = 5, warmup: int = 1) -> float:
     for _ in range(warmup):
         fn()

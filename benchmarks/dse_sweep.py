@@ -1,19 +1,24 @@
 """Paper claim §1: 'design-space exploration' — THE canonical gem5 use
 case.  The DES sweeps system parameters (collective algorithm, overlap,
-straggler mitigation, pod count, link contention on/off) over a
-workload trace derived from a real dry-run artifact (if present) and
-reports the best configuration; thousands of variants evaluate in
-milliseconds each, which is the whole point of simulation-driven
-design.  The contention dimension is new with the event-driven
-executor: it quantifies how much of a makespan is link queueing."""
+straggler mitigation, pod count) over a workload trace derived from a
+real dry-run artifact (if present) and reports the best configuration;
+thousands of variants evaluate in milliseconds each, which is the whole
+point of simulation-driven design.
+
+``--fidelity {atomic,detailed}`` picks the timing model of the outer
+sweep (default: atomic — the gem5 fast-forward trick applied to DSE).
+The winning config is always re-scored under DetailedTiming (the
+spot-check row ``dse/best_detailed_check``), and a contention ablation
+on it quantifies how much of the makespan is link queueing."""
 
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import emit, fidelity_from_argv, time_us
 from repro.core.desim.collectives import ALGORITHMS
 from repro.core.desim.trace import analytic_trace
 from repro.sim import v5e_multipod, v5e_pod
@@ -38,7 +43,9 @@ def _workload():
             "src": "analytic"}
 
 
-def run() -> None:
+def run(fidelity: str = "atomic") -> None:
+    if fidelity not in ("atomic", "detailed"):
+        raise ValueError(f"--fidelity {fidelity!r}: atomic or detailed")
     w = _workload()
     configs = []
     for alg in ALGORITHMS:
@@ -47,7 +54,7 @@ def run() -> None:
                 for pods in (1, 2):
                     configs.append((alg, overlap, slow, pods))
 
-    def evaluate(alg, overlap, slow, pods, contention=True):
+    def evaluate(alg, overlap, slow, pods, timing=fidelity):
         board = (v5e_pod(algorithm=alg) if pods == 1
                  else v5e_multipod(pods, algorithm=alg))
         colls = [{"kind": "all-reduce", "bytes": w["coll"] * 256,
@@ -56,8 +63,7 @@ def run() -> None:
                             colls, overlap=overlap)
         sl = (slow * pods)[:pods] if slow else None
         return board.executor(straggler_slowdowns=sl,
-                              contention=contention
-                              ).execute(tr).makespan_s
+                              timing=timing).execute(tr).makespan_s
 
     t = time_us(lambda: [evaluate(*c) for c in configs], iters=1)
     # key on makespan only: tick-exact ties are common and configs
@@ -67,14 +73,24 @@ def run() -> None:
     best_t, best_c = results[0]
     worst_t, worst_c = results[-1]
     emit("dse/sweep", t / len(configs),
-         f"{len(configs)}_configs src={w['src']}")
+         f"{len(configs)}_configs src={w['src']} fidelity={fidelity}")
     emit("dse/best", best_t * 1e6,
          f"alg={best_c[0]} overlap={best_c[1]} pods={best_c[3]}")
     emit("dse/worst", worst_t * 1e6,
          f"alg={worst_c[0]} overlap={worst_c[1]} "
          f"span={worst_t / best_t:.2f}x")
-    # contention ablation on the best config: how much of the makespan
-    # is link/fabric queueing?
-    free_t = evaluate(*best_c, contention=False)
+    # detailed spot-check of the winner (the sweep ran atomic by
+    # default): full-contention makespan + how much of it is queueing
+    det_t = (best_t if fidelity == "detailed"
+             else evaluate(*best_c, timing="detailed"))
+    emit("dse/best_detailed_check", det_t * 1e6,
+         f"atomic/detailed={best_t / det_t:.3f}" if fidelity == "atomic"
+         else "sweep already detailed")
+    free_t = (best_t if fidelity == "atomic"
+              else evaluate(*best_c, timing="atomic"))
     emit("dse/best_no_contention", free_t * 1e6,
-         f"queueing_share={1.0 - free_t / best_t:.3f}")
+         f"queueing_share={1.0 - free_t / det_t:.3f}")
+
+
+if __name__ == "__main__":
+    run(fidelity_from_argv(sys.argv))

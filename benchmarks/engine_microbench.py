@@ -1,0 +1,120 @@
+"""Engine microbenchmark: wall time + engine events per (timing model,
+board, trace) — the first real perf trajectory for the event engine.
+
+The tentpole claim of the pluggable-timing refactor is that
+``AtomicTiming`` (contention-free analytical costing, batch-resolved
+completions) beats ``DetailedTiming`` (per-op engine events, link-level
+arbitration over the full torus footprint) by >=5x wall clock and
+>=10x engine events on the reference traces, while staying tick-exact
+on contention-free chains.  This module measures exactly that, one row
+per (case, model) plus a speedup row per case, so regressions of the
+fast path show up in ``BENCH_desim.json`` across PRs.
+
+CLI (the ``tools/ci.sh perf`` tier)::
+
+    python -m benchmarks.engine_microbench                    # rows only
+    python -m benchmarks.engine_microbench --assert-speedup 3
+        # exit 1 LOUDLY unless atomic is >= 3x faster than detailed
+        # on the pod_torus reference trace
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import emit
+from repro.core.desim.trace import analytic_trace
+from repro.sim import repeat_trace, v5e_multipod, v5e_pod
+
+COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+DCN_TAIL = [{"kind": "all-reduce", "bytes": 1e9, "participants": 512,
+             "scope": "dcn"}]
+STEPS = 40           # repetitions of the 6-layer golden-style step
+
+# the reference traces: the golden pod_torus chain on one pod, and the
+# multipod DCN/quantum variant (the `v5e_multipod`-class acceptance
+# case for the >=5x wall / >=10x events criteria)
+CASES = {
+    "pod_torus": (lambda: v5e_pod(),
+                  lambda: repeat_trace(
+                      analytic_trace("golden", 6, 1e12, 1e9, COLLS),
+                      STEPS)),
+    "v5e_multipod": (lambda: v5e_multipod(2),
+                     lambda: repeat_trace(
+                         analytic_trace("golden", 6, 1e12, 1e9, COLLS,
+                                        tail_collectives=DCN_TAIL),
+                         STEPS)),
+}
+
+
+def _bench(board, trace, timing: str, repeats: int = 3):
+    best = None
+    events = makespan = 0
+    for _ in range(repeats):
+        ex = board.executor(timing=timing)
+        t0 = time.perf_counter()
+        res = ex.execute(trace)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+        events, makespan = res.events, res.makespan_s
+    return best, events, makespan
+
+
+def measure(case: str):
+    """(wall_s, events, makespan_s) per model for one case."""
+    board_fn, trace_fn = CASES[case]
+    out = {}
+    for timing in ("detailed", "atomic"):
+        out[timing] = _bench(board_fn(), trace_fn(), timing)
+    return out
+
+
+def run() -> None:
+    for case in CASES:
+        res = measure(case)
+        n_ops = len(CASES[case][1]().ops)
+        for timing in ("detailed", "atomic"):
+            wall, events, makespan = res[timing]
+            emit(f"engine/{case}/{timing}", wall * 1e6,
+                 f"events={events} ops={n_ops} "
+                 f"makespan={makespan:.4f}s "
+                 f"events_per_s={events / max(wall, 1e-12):.0f}")
+        wd, ed, _ = res["detailed"]
+        wa, ea, _ = res["atomic"]
+        emit(f"engine/{case}/atomic_speedup", wa * 1e6,
+             f"wall={wd / max(wa, 1e-12):.1f}x "
+             f"events={ed / max(ea, 1):.0f}x "
+             f"(detailed {wd * 1e3:.1f}ms -> atomic {wa * 1e3:.1f}ms)")
+
+
+def assert_speedup(threshold: float, case: str = "pod_torus") -> None:
+    """CI perf-smoke: fail loudly if the atomic fast path regressed."""
+    res = measure(case)
+    wd, ed, md = res["detailed"]
+    wa, ea, ma = res["atomic"]
+    speedup = wd / max(wa, 1e-12)
+    print(f"perf-smoke [{case}]: detailed {wd * 1e3:.1f}ms "
+          f"({ed} events) vs atomic {wa * 1e3:.1f}ms ({ea} events) "
+          f"-> {speedup:.1f}x wall (threshold {threshold:.1f}x)")
+    if md != ma:
+        print(f"perf-smoke FAILED: atomic makespan {ma} != detailed {md} "
+              "on the contention-free reference trace (atomic must stay "
+              "tick-exact there)", file=sys.stderr)
+        raise SystemExit(1)
+    if speedup < threshold:
+        print(f"perf-smoke FAILED: AtomicTiming is only {speedup:.1f}x "
+              f"faster than DetailedTiming on {case} (need >= "
+              f"{threshold:.1f}x) — the fast path regressed",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("perf-smoke OK")
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--assert-speedup" in args:
+        i = args.index("--assert-speedup")
+        assert_speedup(float(args[i + 1]))
+    else:
+        run()

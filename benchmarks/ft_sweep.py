@@ -18,6 +18,12 @@ not sampling noise; per-(MTBF, interval) goodput is the mean over
 ``SEEDS`` schedules, and the optimum is the argmax refined by a
 log-space parabolic fit through its neighbours.
 
+``--fidelity {atomic,detailed}`` picks the timing model (default:
+atomic — exact for TrainSim, whose injected ops are a single compute
+chain, and far fewer engine events; this is what makes the big
+interval x MTBF x seed grid cheap).  One cell is re-run detailed as a
+spot-check row asserting goodput is fidelity-invariant.
+
 Emits one row per cell plus a summary row per MTBF:
   ft_sweep/mtbf<M>/i<interval> , wall_us , goodput=...
   ft_sweep/mtbf<M>             , wall_us , tau_sim=.. young=.. ratio=..
@@ -26,9 +32,10 @@ Emits one row per cell plus a summary row per MTBF:
 from __future__ import annotations
 
 import math
+import sys
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, fidelity_from_argv
 from repro.configs import get_config
 from repro.sim import Simulator, TrainSim, TrainStepCost, v5e_unreliable
 from repro.train.ft_policy import FTPolicy, daly_interval, young_interval
@@ -58,10 +65,12 @@ def _cost(board) -> TrainStepCost:
                          restore_bytes=1.5 * ckpt_bytes)
 
 
-def _run(mtbf: float, interval: int, seed: int, num_steps: int) -> float:
+def _run(mtbf: float, interval: int, seed: int, num_steps: int,
+         fidelity: str = "atomic") -> float:
     board = v5e_unreliable(PODS, seed=seed,
                            horizon=int(1.5 * num_steps) + 100,
-                           mtbf=mtbf, repair=(0, 0), nx=16, ny=16)
+                           mtbf=mtbf, repair=(0, 0), nx=16, ny=16,
+                           timing=fidelity)
     pol = FTPolicy(CFG, num_steps=num_steps, ckpt_interval=interval,
                    pods=PODS,
                    chips_per_pod=board.machine.pod.num_chips,
@@ -88,7 +97,24 @@ def _refine(log_taus, goodputs, best: int) -> float:
     return math.exp(min(max(x_star, lo), hi))   # clamp to the bracket
 
 
-def run() -> None:
+def run(fidelity: str = "atomic") -> None:
+    if fidelity not in ("atomic", "detailed"):
+        raise ValueError(f"--fidelity {fidelity!r}: atomic or detailed")
+    if fidelity == "atomic":
+        # detailed spot-check: the FT timing model must be
+        # fidelity-invariant (TrainSim injects a pure compute chain)
+        mtbf0, iv0, steps0 = MTBFS[0], 8, 1500
+        t0 = time.perf_counter()
+        g_d = _run(mtbf0, iv0, SEEDS[0], steps0, fidelity="detailed")
+        g_a = _run(mtbf0, iv0, SEEDS[0], steps0, fidelity="atomic")
+        emit(f"ft_sweep/detailed_check/mtbf{int(mtbf0)}/i{iv0}",
+             (time.perf_counter() - t0) * 1e6,
+             f"{'exact-match' if g_d == g_a else 'MISMATCH'} "
+             f"goodput={g_a:.4f}")
+        if g_d != g_a:
+            raise RuntimeError(
+                f"ft sweep: atomic goodput {g_a} != detailed {g_d} on "
+                "the spot-check cell")
     for mtbf in MTBFS:
         num_steps = max(6000, int(10 * mtbf))
         tau_y = young_interval(DELTA_STEPS, mtbf)   # in step units
@@ -97,7 +123,7 @@ def run() -> None:
         t_mtbf0 = time.perf_counter()
         for iv in intervals:
             t0 = time.perf_counter()
-            g = sum(_run(mtbf, iv, s, num_steps) for s in SEEDS) \
+            g = sum(_run(mtbf, iv, s, num_steps, fidelity) for s in SEEDS) \
                 / len(SEEDS)
             goodputs.append(g)
             emit(f"ft_sweep/mtbf{int(mtbf)}/i{iv}",
@@ -118,4 +144,4 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    run(fidelity_from_argv(sys.argv))

@@ -21,13 +21,14 @@ import time
 import traceback
 
 from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
-                        distgem5_scaling, elastic_trace, fidelity_spectrum,
-                        ft_sweep, kernel_throughput, roofline, sampled_sim,
-                        serving_sweep)
+                        distgem5_scaling, elastic_trace, engine_microbench,
+                        fidelity_spectrum, ft_sweep, kernel_throughput,
+                        roofline, sampled_sim, serving_sweep)
 from benchmarks.common import rows_as_dict
 
 BENCHES = [
     ("fidelity_spectrum", fidelity_spectrum.run),
+    ("engine_microbench", engine_microbench.run),
     ("elastic_trace", elastic_trace.run),
     ("collective_protocols", collective_protocols.run),
     ("distgem5_scaling", distgem5_scaling.run),

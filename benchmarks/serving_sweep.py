@@ -9,15 +9,21 @@ SLOs start failing.  Every cell replays the *same seeded request
 stream* per rate, so rows are reproducible and comparable across
 boards.
 
+``--fidelity {atomic,detailed}`` picks the timing model (default:
+atomic — exact for serving, whose injected ops are per-pod compute, and
+far fewer engine events).  One cell is re-run detailed as a spot-check
+row asserting the goodput frontier is fidelity-invariant.
+
 Emits one row per cell:
   serving_sweep/<board>/s<slots>/r<rate> , wall_us , goodput/p99-ttft/...
 """
 
 from __future__ import annotations
 
+import sys
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, fidelity_from_argv
 from repro.sim import (ServeSim, ServingCost, Simulator, poisson_requests,
                        v5e_degraded, v5e_serving)
 
@@ -39,24 +45,30 @@ def _boards():
             ("v5e_degraded", lambda: v5e_degraded(0.5, 0.5))]
 
 
-def run() -> None:
+def _cell(mk, slots: int, rate: float, timing: str):
+    board = mk()
+    cost = ServingCost.from_params(chips=board.machine.num_chips, **MODEL)
+    reqs = poisson_requests(NUM_REQUESTS, rate, seed=SEED,
+                            prompt_len=(64, 512), decode_len=(16, 64))
+    srv = ServeSim(cost=cost, requests=reqs, slots=slots,
+                   seq_capacity=1024, slo_ttft_s=SLO_TTFT_S,
+                   slo_latency_s=SLO_LATENCY_S)
+    sim = Simulator(board, srv, timing=timing)
+    t0 = time.perf_counter()
+    sim.run_to_completion()
+    return (time.perf_counter() - t0) * 1e6, srv.summary()
+
+
+def run(fidelity: str = "atomic") -> None:
+    if fidelity not in ("atomic", "detailed"):
+        raise ValueError(f"--fidelity {fidelity!r}: atomic or detailed")
+    first = None
     for bname, mk in _boards():
         for slots in SLOTS:
             for rate in RATES_RPS:
-                board = mk()
-                cost = ServingCost.from_params(
-                    chips=board.machine.num_chips, **MODEL)
-                reqs = poisson_requests(
-                    NUM_REQUESTS, rate, seed=SEED,
-                    prompt_len=(64, 512), decode_len=(16, 64))
-                srv = ServeSim(cost=cost, requests=reqs, slots=slots,
-                               seq_capacity=1024, slo_ttft_s=SLO_TTFT_S,
-                               slo_latency_s=SLO_LATENCY_S)
-                sim = Simulator(board, srv)
-                t0 = time.perf_counter()
-                sim.run_to_completion()
-                wall_us = (time.perf_counter() - t0) * 1e6
-                s = srv.summary()
+                wall_us, s = _cell(mk, slots, rate, fidelity)
+                if first is None:
+                    first = (mk, slots, rate)
                 emit(f"serving_sweep/{bname}/s{slots}/r{int(rate)}",
                      wall_us,
                      f"goodput={s['goodput_rps']:.1f}rps "
@@ -65,7 +77,24 @@ def run() -> None:
                      f"p99_ttft={s['p99_ttft_s'] * 1e3:.2f}ms "
                      f"p99_lat={s['p99_latency_s'] * 1e3:.1f}ms "
                      f"batch={s['mean_batch']:.1f}")
+    if fidelity == "atomic" and first is not None:
+        # detailed spot-check: serving timing must be fidelity-exact
+        # (re-run the atomic cell warm so the speedup column compares
+        # like with like — the sweep's first cell paid the cold start)
+        mk, slots, rate = first
+        wall_a, s_a = _cell(mk, slots, rate, "atomic")
+        wall_d, s_d = _cell(mk, slots, rate, "detailed")
+        ok = s_d == s_a
+        emit(f"serving_sweep/detailed_check/s{slots}/r{int(rate)}",
+             wall_d,
+             f"{'exact-match' if ok else 'MISMATCH'} "
+             f"atomic_wall={wall_a:.0f}us "
+             f"speedup={wall_d / max(wall_a, 1e-9):.1f}x")
+        if not ok:
+            raise RuntimeError(
+                "serving sweep: atomic and detailed summaries diverged "
+                f"on the spot-check cell: {s_a} vs {s_d}")
 
 
 if __name__ == "__main__":
-    run()
+    run(fidelity_from_argv(sys.argv))

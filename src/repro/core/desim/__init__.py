@@ -13,5 +13,7 @@ from repro.core.desim.machine import (  # noqa: F401
 from repro.core.desim.trace import HloTrace, TraceOp  # noqa: F401
 from repro.core.desim.simnodes import (  # noqa: F401
     ChipSim, ClusterSim, DcnSim, WireSim)
+from repro.core.desim.timing import (  # noqa: F401
+    AtomicTiming, DetailedTiming, TimingModel, get_timing_model)
 from repro.core.desim.executor import (  # noqa: F401
     ExecResult, TraceExecutor, predict_step_time)

@@ -13,7 +13,13 @@ through ports — and replays the trace as events on per-pod
 ``EventQueue``s (1 tick = 1 ns).  There are no float resource clocks:
 all arbitration happens in integer ticks on the queue.
 
-Timing semantics per chip:
+Timing is **pluggable** (``repro.core.desim.timing`` — the gem5
+CPU-model fidelity ladder): ``DetailedTiming`` gives the semantics
+below; ``AtomicTiming`` costs ops contention-free with batch-resolved
+completions (the fast-forward model), and a drained run may be
+restored under the *other* model — gem5's ``switch_cpus``.
+
+Detailed timing semantics per chip:
 
 * ``compute`` ops serialize on the chip's compute resource at the
   roofline time ``max(flops/peak, bytes/hbm_bw) * slowdown``.
@@ -49,6 +55,7 @@ full tree object is on ``TraceExecutor.sim_root`` after ``execute``).
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -56,6 +63,8 @@ from repro.core.desim.collectives import get_algorithm
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import (ChipSim, ClusterSim, DcnSim,
                                        TICKS_PER_S, WireSim)
+from repro.core.desim.timing import (AtomicTiming, DetailedTiming,
+                                     TimingModel, get_timing_model)
 from repro.core.desim.trace import HloTrace, TraceOp
 from repro.core.events import EventQueue, QuantumSync
 
@@ -100,9 +109,13 @@ class TraceExecutor:
     heterogeneous.  This keeps the DES cost O(ops x pods), which is what
     lets DSE sweeps run thousands of variants (the gem5 use case).
 
-    ``contention=False`` disables link/uplink serialization (every
-    transfer sees an idle wire) — the contention-free baseline for
-    measuring how much of a makespan is queueing.
+    ``timing`` selects the fidelity model (gem5's CPU-model ladder):
+    ``"detailed"`` (default — link contention, quantum sync, engine
+    events) or ``"atomic"`` (contention-free analytical costing, the
+    fast-forward model; see ``repro.core.desim.timing``).  The old
+    ``contention=False`` ablation is deprecated and maps to
+    ``AtomicTiming`` — the contention-free baseline for measuring how
+    much of a makespan is queueing.
 
     Lifecycle::
 
@@ -120,14 +133,30 @@ class TraceExecutor:
     def __init__(self, machine: ClusterModel, algorithm: str = "torus2d",
                  record_timeline: bool = False,
                  straggler_slowdowns: Optional[List[float]] = None,
-                 record_stats: bool = False, contention: bool = True):
+                 record_stats: bool = False,
+                 contention: Optional[bool] = None, timing=None):
         self.machine = machine
         self.algorithm = algorithm
         self.alg = get_algorithm(algorithm)
         self.dcn_alg = get_algorithm("hierarchical")
         self.record_timeline = record_timeline
         self.record_stats = record_stats
-        self.contention = contention
+        # fidelity selection: an explicit ``timing`` wins; the legacy
+        # ``contention=False`` ablation maps to AtomicTiming (which has
+        # the same contention-free op costs, minus the quantum error
+        # model and the per-op engine events)
+        if timing is None:
+            if contention is False:
+                warnings.warn(
+                    "TraceExecutor(contention=False) is deprecated; use "
+                    "timing='atomic' (the contention-free fidelity model)",
+                    DeprecationWarning, stacklevel=2)
+                timing = "atomic"
+            else:
+                timing = "detailed"
+        self.timing: TimingModel = get_timing_model(timing)
+        # legacy attribute: True iff link contention is simulated
+        self.contention = self.timing.detailed
         pods = machine.num_pods
         self.slow = (straggler_slowdowns or [1.0] * pods)[:pods]
         while len(self.slow) < pods:
@@ -178,11 +207,15 @@ class TraceExecutor:
         nops = len(trace.ops)
         self._trace = trace
         self._queues = [EventQueue(f"pod{p}") for p in range(pods)]
+        self.timing.reset(self)
         needs_dcn = any(self._routes_dcn(op) for op in trace.ops)
         # quantum_ns == 0 means "no quantum error model": dcn ops then
-        # complete at their exact tick instead of a sync boundary
+        # complete at their exact tick instead of a sync boundary.
+        # AtomicTiming never applies the quantum model (dcn ops complete
+        # at their exact analytical tick).
         self._sync = (QuantumSync(self._queues, m.quantum_ns)
-                      if needs_dcn and m.quantum_ns > 0 else None)
+                      if needs_dcn and m.quantum_ns > 0
+                      and self.timing.detailed else None)
         self.sim_root = self._build(self._queues, self._sync)
         # dependency bookkeeping (per pod: SPMD replicas diverge only
         # through stragglers and the shared dcn fabric)
@@ -295,13 +328,7 @@ class TraceExecutor:
             # serializes and restore() re-schedules.
             self._deferred.append((p, idx, int(ready)))
             return
-        op = self._trace.ops[idx]
-        payload = self._payload(p, idx, ready)
-        if op.kind == "compute":
-            # service time is end - start (wait precedes start)
-            self._chips[p].exec_compute(ready, op.flops, op.bytes, payload)
-        else:
-            self._chips[p].issue_collective(payload)
+        self.timing.issue(self, p, idx, ready)
 
     def _on_done(self, start: int, end: int, payload: dict) -> None:
         p, idx = payload["pod"], payload["op_idx"]
@@ -380,11 +407,7 @@ class TraceExecutor:
         otherwise).  Returns ``done()``; call again to resume."""
         if self._trace is None:
             raise RuntimeError("advance() before begin()/restore()")
-        if self._sync is not None:
-            self._sync.run_until_drained(max_tick=max_tick,
-                                         stop_check=stop_check)
-        else:
-            self._advance_nosync(max_tick, stop_check)
+        self.timing.advance(self, max_tick, stop_check)
         return self.done()
 
     def _advance_nosync(self, max_tick: Optional[int],
@@ -426,6 +449,7 @@ class TraceExecutor:
     def drained(self) -> bool:
         return (self._trace is not None and self._draining
                 and all(q.empty() for q in self._queues)
+                and self.timing.quiescent(self)
                 and (self._sync is None
                      or self._sync.pending_messages == 0))
 
@@ -440,15 +464,10 @@ class TraceExecutor:
             wires.append([[x, y, d, l.busy_until, l.bytes_carried,
                            l.transfers]
                           for (x, y, d), l in sorted(w._net.links.items())])
-        rendezvous = []
-        for key in sorted(self._dcn._rendezvous):
-            r = self._dcn._rendezvous[key]
-            rendezvous.append({
-                "op_idx": key,
-                "arrivals": [[w["pod"], w["ready"]] for w in r["waiters"]],
-            })
+        rendezvous = self.timing.rendezvous_state(self)
         return {
             "tick": self.now,
+            "timing": self.timing.name,
             "pod_dims": [self.machine.pod.nx, self.machine.pod.ny],
             "queues": [q.snapshot() for q in self._queues],
             "op_end": [list(row) for row in self._op_end],
@@ -460,6 +479,7 @@ class TraceExecutor:
             "rendezvous": rendezvous,
             "chip_free": [c.free_tick for c in self._chips],
             "wires": wires,
+            "wire_busy": [w.busy_tick() for w in self._wires],
             "dcn_uplinks": [[l.busy_until, l.bytes_carried, l.transfers]
                             for l in self._dcn.uplinks],
             "stats": self.sim_root.stats.state_dict(),
@@ -480,6 +500,13 @@ class TraceExecutor:
         tree are identical to one that never paused: the deferred
         frontier is re-scheduled at its exact ready ticks on fresh
         queues, so event order replays deterministically.
+
+        The executor's ``timing`` model may also differ from the one
+        the snapshot was taken under — the gem5 ``switch_cpus`` move:
+        atomic fast-forward to a checkpoint, restore under detailed
+        for the region of interest (``Simulator.switch_timing`` wraps
+        this).  Switching detailed→atomic discards link-occupancy
+        state (atomic does not model it).
         """
         pods = self.machine.num_pods
         if pods != len(state["op_end"]):
@@ -513,7 +540,7 @@ class TraceExecutor:
             self._chips[p]._free = int(free)
         same_dims = (list(state.get("pod_dims", [])) ==
                      [self.machine.pod.nx, self.machine.pod.ny])
-        if same_dims:
+        if same_dims and self.timing.detailed:
             for p, rows in enumerate(state["wires"]):
                 net = self._wires[p]._net
                 for x, y, d, busy, nbytes, transfers in rows:
@@ -521,6 +548,12 @@ class TraceExecutor:
                     link.busy_until = busy
                     link.bytes_carried = nbytes
                     link.transfers = int(transfers)
+        # wire-occupancy high-water mark: keeps per_chip_busy_s honest
+        # across restores that cannot carry link state (atomic runs,
+        # cross-model switches, re-dimensioned pods)
+        for p, busy in enumerate(state.get("wire_busy", [])):
+            if p < len(self._wires):
+                self._wires[p]._busy_hwm = int(busy)
         for i, (busy, nbytes, transfers) in enumerate(state["dcn_uplinks"]):
             if i < len(self._dcn.uplinks):
                 link = self._dcn.uplinks[i]
@@ -528,21 +561,17 @@ class TraceExecutor:
                 link.bytes_carried = nbytes
                 link.transfers = int(transfers)
         # partial cross-pod rendezvous: re-arrive the pods that had
-        # already reached the fabric (synchronous port sends; the
-        # transaction completes when the remaining pods arrive)
+        # already reached the fabric (the transaction completes when
+        # the remaining pods arrive)
         for r in state["rendezvous"]:
             idx = int(r["op_idx"])
             for p, ready in r["arrivals"]:
-                self._chips[int(p)].issue_collective(
-                    self._payload(int(p), idx, int(ready)))
-        # the deferred frontier replays as issue *events* at its exact
-        # ready ticks: arbitration order interleaves with post-restore
-        # completions exactly as in an uninterrupted run
+                self.timing.restore_arrival(self, int(p), idx, int(ready))
+        # the deferred frontier replays at its exact ready ticks:
+        # arbitration order interleaves with post-restore completions
+        # exactly as in an uninterrupted run
         for p, idx, ready in state["deferred"]:
-            p, idx, ready = int(p), int(idx), int(ready)
-            self._queues[p].schedule(
-                lambda p=p, idx=idx, ready=ready: self._issue(p, idx, ready),
-                ready, name=f"issue:{self._trace.ops[idx].name or idx}")
+            self.timing.restore_issue(self, int(p), int(idx), int(ready))
         return self
 
     # -- lifecycle: result -------------------------------------------------

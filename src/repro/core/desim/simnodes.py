@@ -80,11 +80,12 @@ class ChipSim(SimObject):
                             f"{self.ports.unconnected()}")
 
     # ------------------------------------------------------------------
-    def exec_compute(self, ready: int, flops: float, nbytes: float,
-                     payload: dict) -> None:
-        """Arbitrate the compute resource and schedule the completion
-        (``payload['done']`` — same handoff as the wire/fabric path)."""
-        done: DoneFn = payload["done"]
+    def acquire(self, ready: int, flops: float,
+                nbytes: float) -> Tuple[int, int]:
+        """Arbitrate the compute resource: serialize at roofline time
+        on the chip's integer free tick, record stats, and return
+        ``(start, end)``.  Shared by both timing models — a chip is one
+        instruction stream even at atomic fidelity."""
         dur = to_ticks(self._model.compute_time_s(flops, nbytes)
                        * self.slowdown)
         start = max(ready, self._free)
@@ -93,6 +94,14 @@ class ChipSim(SimObject):
         self.st_ops.inc()
         self.st_busy.inc(dur / TICKS_PER_S)
         self.st_wait.sample((start - ready) / TICKS_PER_S)
+        return start, end
+
+    def exec_compute(self, ready: int, flops: float, nbytes: float,
+                     payload: dict) -> None:
+        """Arbitrate the compute resource and schedule the completion
+        (``payload['done']`` — same handoff as the wire/fabric path)."""
+        done: DoneFn = payload["done"]
+        start, end = self.acquire(ready, flops, nbytes)
         self._eq.schedule(lambda: done(start, end, payload), end,
                           name=payload.get("name", "compute"))
 
@@ -126,6 +135,7 @@ class WireSim(SimObject):
         self._machine = machine
         self._alg = algorithm
         self._eq = queue
+        self._busy_hwm = 0   # atomic-mode wire-occupancy high-water tick
         pod = machine.pod
         self._net = TorusNetwork(pod.nx, pod.ny, pod.ici.bw,
                                  pod.ici.latency_s)
@@ -214,10 +224,20 @@ class WireSim(SimObject):
                           name=payload.get("name", kind))
         return payload
 
+    def record_atomic(self, nbytes: float, dur: int, end: int) -> None:
+        """Account a contention-free (AtomicTiming) collective: same
+        counters as the detailed path, zero link wait, no link state."""
+        self.st_colls.inc()
+        self.st_bytes.inc(nbytes)
+        self.st_busy.inc(dur / TICKS_PER_S)
+        self.st_wait.sample(0.0)
+        self._busy_hwm = max(self._busy_hwm, int(end))
+
     def busy_tick(self) -> int:
         if not self._net.links:
-            return 0
-        return int(max(l.busy_until for l in self._net.links.values()))
+            return self._busy_hwm
+        return max(self._busy_hwm,
+                   int(max(l.busy_until for l in self._net.links.values())))
 
 
 class DcnSim(SimObject):
@@ -309,6 +329,15 @@ class DcnSim(SimObject):
                            done(start, at, w), at,
                            name=w.get("name", "dcn"))
         return payload
+
+    def record_atomic(self, nbytes: float, dur: int, skew: int) -> None:
+        """Account a contention-free (AtomicTiming) cross-pod
+        collective: same counters as the detailed path, no uplink
+        state, no quantum rounding."""
+        self.st_colls.inc()
+        self.st_bytes.inc(nbytes)
+        self.st_busy.inc(dur / TICKS_PER_S)
+        self.st_skew.sample(skew / TICKS_PER_S)
 
     def busy_tick(self) -> int:
         if not self.uplinks:

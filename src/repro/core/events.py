@@ -133,10 +133,17 @@ class EventQueue:
     # ------------------------------------------------------------------
     def schedule(self, callback: Callable[[], None], tick: int,
                  priority: int = PRI_DEFAULT, name: str = "") -> Event:
-        """Schedule ``callback`` at absolute ``tick``."""
+        """Schedule ``callback`` at absolute ``tick`` (>= ``now`` and
+        never negative — an event in the past would violate the
+        tick-ordered merge the executor runs over its pod queues)."""
+        if tick < 0:
+            raise ValueError(
+                f"cannot schedule event {name!r} at negative tick {tick} "
+                "(ticks are absolute simulation time, >= 0)")
         if tick < self._now:
             raise ValueError(
-                f"cannot schedule in the past: tick={tick} < now={self._now}")
+                f"cannot schedule event {name!r} in the past: "
+                f"tick={tick} < now={self._now}")
         entry = _HeapEntry(int(tick), priority, self._seq, callback,
                            name=name)
         self._seq += 1
@@ -145,6 +152,13 @@ class EventQueue:
 
     def schedule_after(self, callback: Callable[[], None], delay: int,
                        priority: int = PRI_DEFAULT, name: str = "") -> Event:
+        """Schedule ``callback`` ``delay`` ticks from ``now`` (delay
+        must be >= 0: negative delays would land the event in the
+        past)."""
+        if delay < 0:
+            raise ValueError(
+                f"cannot schedule event {name!r} with negative delay "
+                f"{delay} (use a tick >= now via schedule())")
         return self.schedule(callback, self._now + int(delay), priority, name)
 
     # ------------------------------------------------------------------
@@ -172,7 +186,9 @@ class EventQueue:
                 if nt is None:
                     return "queue empty"
                 if max_tick is not None and nt > max_tick:
-                    self._now = max_tick
+                    # never rewind: a max_tick already behind ``now``
+                    # must not move simulation time backwards
+                    self._now = max(self._now, max_tick)
                     return "max tick"
                 if max_events is not None and fired >= max_events:
                     return "max events"

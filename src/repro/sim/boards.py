@@ -49,6 +49,9 @@ class Board:
     straggler_slowdowns: Optional[List[float]] = None
     name: str = "board"
     failure_schedule: Optional[object] = None
+    #: default fidelity model runs on this board start under
+    #: ("detailed" | "atomic"; see repro.core.desim.timing)
+    timing: str = "detailed"
 
     def instantiate(self) -> "Board":
         if not getattr(self.machine, "_frozen", False):
@@ -57,10 +60,17 @@ class Board:
 
     def executor(self, **kw) -> TraceExecutor:
         """A TraceExecutor wired for this board (kw: record_stats,
-        record_timeline, contention, ... pass through)."""
+        record_timeline, timing, ... pass through)."""
         self.instantiate()
         kw.setdefault("algorithm", self.algorithm)
         kw.setdefault("straggler_slowdowns", self.straggler_slowdowns)
+        # the board's default timing applies unless the caller chose a
+        # model — explicitly via timing=, or through the deprecated
+        # contention flag (False maps to AtomicTiming in the executor;
+        # an explicit True is a request for contention simulation and
+        # must not be overridden by an atomic board default)
+        if kw.get("timing") is None and kw.get("contention") is None:
+            kw["timing"] = self.timing
         return TraceExecutor(self.machine, **kw)
 
 
@@ -85,49 +95,56 @@ def _cluster(name: str, num_pods: int, quantum_ns: Optional[int],
 
 
 def v5e_pod(nx: int = 16, ny: int = 16, *, chip: Optional[Dict] = None,
-            ici: Optional[Dict] = None, algorithm: str = "torus2d") -> Board:
+            ici: Optional[Dict] = None, algorithm: str = "torus2d",
+            timing: str = "detailed") -> Board:
     """One TPU v5e pod: a ``nx x ny`` ICI torus of v5e chips."""
     m = _cluster("cluster", 1, None, nx, ny, chip, ici, None)
-    return Board(m, algorithm=algorithm, name=f"v5e_pod_{nx}x{ny}")
+    return Board(m, algorithm=algorithm, timing=timing,
+                 name=f"v5e_pod_{nx}x{ny}")
 
 
 def v5e_multipod(num_pods: int = 2, quantum_ns: int = 100_000,
                  nx: int = 16, ny: int = 16, *,
                  chip: Optional[Dict] = None, ici: Optional[Dict] = None,
                  dcn: Optional[Dict] = None,
-                 algorithm: str = "torus2d") -> Board:
+                 algorithm: str = "torus2d",
+                 timing: str = "detailed") -> Board:
     """``num_pods`` v5e pods joined by DCN, synchronized in dist-gem5
     quanta of ``quantum_ns`` (0 disables the quantum error model)."""
     m = _cluster("cluster", num_pods, quantum_ns, nx, ny, chip, ici, dcn)
-    return Board(m, algorithm=algorithm, name=f"v5e_multipod_{num_pods}")
+    return Board(m, algorithm=algorithm, timing=timing,
+                 name=f"v5e_multipod_{num_pods}")
 
 
 def v5e_straggler(num_pods: int = 2, slowdown: float = 2.0,
                   slow_pods: Optional[List[int]] = None,
                   quantum_ns: int = 100_000, nx: int = 16, ny: int = 16,
-                  ) -> Board:
+                  timing: str = "detailed") -> Board:
     """Multipod with straggling pods (default: the last pod runs at
     ``1/slowdown`` speed) — the fault-injection board."""
     m = _cluster("cluster", num_pods, quantum_ns, nx, ny, None, None, None)
     slow = [1.0] * num_pods
     for p in (slow_pods if slow_pods is not None else [num_pods - 1]):
         slow[p] = slowdown
-    return Board(m, straggler_slowdowns=slow,
+    return Board(m, straggler_slowdowns=slow, timing=timing,
                  name=f"v5e_straggler_{num_pods}x{slowdown}")
 
 
 def v5e_degraded(hbm_frac: float = 0.5, ici_frac: float = 0.5,
-                 nx: int = 16, ny: int = 16) -> Board:
+                 nx: int = 16, ny: int = 16, *,
+                 timing: str = "detailed") -> Board:
     """A single pod with derated HBM and ICI bandwidth — what a step
     costs on sick hardware (capacity-planning variant)."""
     m = _cluster("cluster", 1, None, nx, ny,
                  chip={"hbm_bw": 819e9 * hbm_frac},
                  ici={"bw": 50e9 * ici_frac}, dcn=None)
-    return Board(m, name=f"v5e_degraded_h{hbm_frac}_i{ici_frac}")
+    return Board(m, timing=timing,
+                 name=f"v5e_degraded_h{hbm_frac}_i{ici_frac}")
 
 
 def v5e_serving(nx: int = 8, ny: int = 8, replicas: int = 1, *,
-                chip: Optional[Dict] = None) -> Board:
+                chip: Optional[Dict] = None,
+                timing: str = "detailed") -> Board:
     """Serving deployment: ``replicas`` independent pod *slices* of
     ``nx x ny`` chips each (inference replicas are sliced much smaller
     than training pods).  With a dynamic serving workload every pod is
@@ -135,7 +152,7 @@ def v5e_serving(nx: int = 8, ny: int = 8, replicas: int = 1, *,
     (``repro.sim.workloads.ServeSim``)."""
     # quantum 0: serving replicas never speak DCN, so no quantum model
     m = _cluster("cluster", replicas, 0, nx, ny, chip, None, None)
-    return Board(m, name=f"v5e_serving_{replicas}x{nx}x{ny}")
+    return Board(m, timing=timing, name=f"v5e_serving_{replicas}x{nx}x{ny}")
 
 
 def v5e_unreliable(num_pods: int = 4, *, seed: int = 0,
@@ -143,8 +160,8 @@ def v5e_unreliable(num_pods: int = 4, *, seed: int = 0,
                    straggler_mtbs: float = 0.0,
                    preemption_mtbs: float = 0.0,
                    repair: tuple = (40, 120), nx: int = 16, ny: int = 16,
-                   chip: Optional[Dict] = None, ici: Optional[Dict] = None
-                   ) -> Board:
+                   chip: Optional[Dict] = None, ici: Optional[Dict] = None,
+                   timing: str = "detailed") -> Board:
     """An unreliable multipod: ``num_pods`` v5e pods plus a seeded
     :class:`~repro.train.ft_policy.FailureSchedule` (MTBF-driven pod
     failures, optional transient stragglers and preemptions, all in
@@ -157,7 +174,7 @@ def v5e_unreliable(num_pods: int = 4, *, seed: int = 0,
         seed=seed, horizon=horizon, pods=num_pods, mtbf=mtbf,
         straggler_mtbs=straggler_mtbs, preemption_mtbs=preemption_mtbs,
         repair=repair)
-    return Board(m, failure_schedule=sched,
+    return Board(m, failure_schedule=sched, timing=timing,
                  name=f"v5e_unreliable_{num_pods}_s{seed}")
 
 

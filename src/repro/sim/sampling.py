@@ -1,35 +1,38 @@
 """SimPoint/SMARTS-style sampled simulation (gem5 §1.3, §2.7 workflow).
 
 gem5's answer to "a detailed simulation of one minute of wall clock
-takes days" is to not simulate most of it in detail: fast-forward to
-the region of interest with a cheap functional model, run only sampled
-windows through the detailed timing model, and extrapolate (SimPoint
-picks representative windows; SMARTS samples periodically).  For a
-steady-state training run the same trick is almost free: every step
-executes the same compiled program, so a few detailed windows pin down
-the per-step time and the rest is fast-forwarded.
+takes days" is to not simulate most of it in detail: fast-forward with
+a cheap functional model, run only sampled windows through the detailed
+timing model (SimPoint picks representative windows; SMARTS samples
+periodically).  For a steady-state training run the same trick is
+almost free: every step executes the same compiled program, so a few
+detailed windows pin down contention effects and the rest runs atomic.
 
-``SampledSimulation`` reproduces the periodic (SMARTS) scheme:
+``SampledSimulation`` reproduces the periodic (SMARTS) scheme **in the
+engine**: one resumable run whose timing model is switched at segment
+boundaries (the gem5 ``switch_cpus`` move, through the executor's
+drain/serialize/restore path — see ``repro.core.desim.timing``):
 
-* a ``warmup`` segment and periodic ``window``-step windows run through
-  the full contention-aware desim (``TraceExecutor``);
-* the steps between windows are **fast-forwarded**: their ticks advance
-  at the estimated per-step rate without any events firing.  Two
-  estimators: ``"extrapolate"`` (mean of detailed windows so far — the
-  SMARTS extrapolation, default) and ``"atomic"`` (closed-form
-  contention-free roofline sum — gem5's atomic fidelity, available
-  before any window has run and reported alongside for comparison).
+* a ``warmup`` segment and periodic ``window``-step windows run under
+  ``DetailedTiming`` (full link contention, quantum sync);
+* the steps between windows run under ``AtomicTiming`` — real
+  in-engine fast-forward: op ticks advance at the contention-free
+  analytical rate, **stats keep accumulating** (op counts, busy
+  seconds, bytes on wire), and ~zero engine events fire.  There is no
+  out-of-engine extrapolation anymore: the final tick *is* the
+  simulated time, checkpoints taken mid-fast-forward are real
+  checkpoints, and dynamic workloads can fast-forward the same way.
 
 Accuracy/coverage contract (test-enforced in tests/test_sampling.py and
 benchmarked in benchmarks/sampled_sim.py): on a >=100-step steady-state
 workload the default plan executes <= 20% of ops at detailed fidelity
-and predicts the full-detail total time within 5%.
+and lands within 5% of the full-detail total time.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.desim.simnodes import TICKS_PER_S
 from repro.core.desim.trace import HloTrace
@@ -83,12 +86,13 @@ class SamplePlan:
 class SampledResult:
     num_steps: int
     detailed_steps: int
-    predicted_total_s: float
-    detailed_op_fraction: float        # ops run through desim / total ops
+    predicted_total_s: float           # in-engine final tick (real time)
+    detailed_op_fraction: float        # ops run at detailed fidelity
     window_step_s: List[float]         # per-step time of each window
     atomic_step_s: float               # contention-free roofline estimate
     events: int                        # engine events actually fired
     segments: List[Tuple[str, int]] = field(default_factory=list)
+    stats: Optional[Dict[str, Any]] = None   # full-run gem5 stats tree
 
     @property
     def mean_step_s(self) -> float:
@@ -114,19 +118,35 @@ def atomic_step_time_s(board: Board, step: HloTrace) -> float:
 
 
 class SampledSimulation:
-    """Drive a steady-state workload through a :class:`SamplePlan`.
+    """Drive a steady-state workload through a :class:`SamplePlan` as
+    ONE in-engine run with mid-run timing-model switches.
 
     Generator-style like ``Simulator``: ``run()`` yields a
     ``SAMPLE_BEGIN`` exit event before each detailed window and ``DONE``
-    at the end; ``result()`` returns the :class:`SampledResult`.
+    at the end; ``result()`` returns the :class:`SampledResult` —
+    including the full stats tree, which now covers the fast-forwarded
+    regions too (they execute for real at atomic fidelity).
+
+    Window boundaries follow the *pod-0* completion frontier.  On
+    multipod boards lagging pods can still be mid-window at a switch:
+    their in-flight ops complete under the old model (gem5 drain), but
+    their deferred remainder re-times under the new one, and under
+    QuantumSync the switch lands on a quantum boundary — so detailed
+    windows are step-exact on single-pod boards and quantum/straggler-
+    granular on multipod ones (the usual SMARTS sampling-noise caveat,
+    not a correctness issue: the run's final tick is still the real
+    in-engine time).
     """
 
     def __init__(self, board: Board, step: HloTrace, num_steps: int,
                  plan: Optional[SamplePlan] = None,
-                 ff_mode: str = "extrapolate"):
-        if ff_mode not in ("extrapolate", "atomic"):
-            raise ValueError(f"ff_mode {ff_mode!r}: "
-                             "'extrapolate' or 'atomic'")
+                 ff_mode: str = "atomic"):
+        if ff_mode != "atomic":
+            raise ValueError(
+                f"ff_mode {ff_mode!r}: only 'atomic' is supported — "
+                "fast-forward now runs in-engine under AtomicTiming "
+                "(the analytical 'extrapolate' mode was removed; see "
+                "docs/sampling.md)")
         self.board = board.instantiate()
         self.step = step
         self.num_steps = int(num_steps)
@@ -134,48 +154,83 @@ class SampledSimulation:
         self.ff_mode = ff_mode
         self._result: Optional[SampledResult] = None
 
+    # ------------------------------------------------------------------
+    def _switch(self, ex, timing: str):
+        """gem5 switch_cpus through the drain/snapshot/restore path.
+
+        Uses the in-memory snapshot directly (not the JSON checkpoint
+        file format): a sampled run switches models dozens of times and
+        the trace re-serialization would dominate the wall time the
+        fast-forward saves.  Semantically identical — the file path is
+        covered by ``Simulator.switch_timing`` and the cross-model
+        checkpoint tests."""
+        ex.drain()
+        state = ex.snapshot()
+        fresh = self.board.executor(record_stats=True, timing=timing,
+                                    straggler_slowdowns=list(ex.slow))
+        return fresh.restore(ex._trace, state)
+
     def run(self) -> Iterator[ExitEvent]:
         atomic = atomic_step_time_s(self.board, self.step)
         segs = self.plan.segments(self.num_steps)
+        n_ops = len(self.step.ops)
+        trace = repeat_trace(self.step, self.num_steps)
+
+        progress = {"ops": 0, "detailed_ops": 0, "last_end": 0,
+                    "model": "detailed" if segs and segs[0][0] == "detailed"
+                             else "atomic"}
+
+        def hook(op, idx, start, end):
+            progress["ops"] += 1
+            if progress["model"] == "detailed":
+                progress["detailed_ops"] += 1
+            if end > progress["last_end"]:
+                progress["last_end"] = end
+
+        ex = self.board.executor(record_stats=True,
+                                 timing=progress["model"])
+        ex.op_hook = hook
+        ex.begin(trace)
+
         window_step_s: List[float] = []
-        total_s = 0.0
         detailed = 0
-        events = 0
         pos = 0
         for kind, n in segs:
+            want = "detailed" if kind == "detailed" else "atomic"
+            if want != progress["model"]:
+                ex = self._switch(ex, want)
+                progress["model"] = want
+                ex.op_hook = hook
             if kind == "detailed":
                 yield ExitEvent(
                     ExitEventType.SAMPLE_BEGIN,
-                    tick=int(round(total_s * TICKS_PER_S)),
+                    tick=progress["last_end"],
                     cause=f"window @ step {pos} ({n} steps)",
                     payload={"step": pos, "steps": n})
-                ex = self.board.executor()
-                res = ex.execute(repeat_trace(self.step, n))
-                window_step_s.append(res.makespan_s / n)
-                total_s += res.makespan_s
+            seg_start = progress["last_end"]
+            target = (pos + n) * n_ops
+            ex.advance(stop_check=lambda: progress["ops"] >= target)
+            if kind == "detailed":
+                window_step_s.append(
+                    (progress["last_end"] - seg_start) / TICKS_PER_S / n)
                 detailed += n
-                events += res.events
-            else:
-                if self.ff_mode == "extrapolate" and window_step_s:
-                    # SMARTS: extrapolate at the measured detailed rate
-                    per_step = sum(window_step_s) / len(window_step_s)
-                else:
-                    per_step = atomic
-                total_s += per_step * n
             pos += n
-        ops_per_step = len(self.step.ops)
+        ex.advance()                 # lagging pods finish the last step
+        res = ex.result()
+
         self._result = SampledResult(
             num_steps=self.num_steps,
             detailed_steps=detailed,
-            predicted_total_s=total_s,
-            detailed_op_fraction=(detailed * ops_per_step) /
-            max(self.num_steps * ops_per_step, 1),
+            predicted_total_s=res.makespan_s,
+            detailed_op_fraction=progress["detailed_ops"] /
+            max(self.num_steps * n_ops, 1),
             window_step_s=window_step_s,
             atomic_step_s=atomic,
-            events=events,
-            segments=segs)
+            events=res.events,
+            segments=segs,
+            stats=res.stats)
         yield ExitEvent(ExitEventType.DONE,
-                        tick=int(round(total_s * TICKS_PER_S)),
+                        tick=int(round(res.makespan_s * TICKS_PER_S)),
                         cause=f"sampled {detailed}/{self.num_steps} steps")
 
     def result(self) -> SampledResult:
@@ -186,7 +241,7 @@ class SampledSimulation:
 
 def sampled_run(board: Board, step: HloTrace, num_steps: int,
                 plan: Optional[SamplePlan] = None,
-                ff_mode: str = "extrapolate") -> SampledResult:
+                ff_mode: str = "atomic") -> SampledResult:
     """One-shot sampled simulation (drains the exit-event stream)."""
     sim = SampledSimulation(board, step, num_steps, plan, ff_mode)
     for _ in sim.run():

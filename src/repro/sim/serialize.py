@@ -91,7 +91,8 @@ def checkpoint_executor(ex: TraceExecutor) -> Dict[str, Any]:
         "executor": {
             "algorithm": ex.algorithm,
             "straggler_slowdowns": list(ex.slow),
-            "contention": ex.contention,
+            "timing": ex.timing.name,
+            "contention": ex.contention,      # legacy (== timing.detailed)
             "record_timeline": ex.record_timeline,
             "record_stats": ex.record_stats,
         },
@@ -142,13 +143,17 @@ def restore_executor(ckpt: Dict[str, Any],
     ``machine``: restore onto this (instantiated) machine instead of
     rebuilding the checkpointed one — the DSE re-parameterization hook.
     ``overrides``: TraceExecutor kwargs overriding the checkpointed
-    config (e.g. ``record_stats=True``).
+    config (e.g. ``record_stats=True``, or ``timing="detailed"`` — the
+    gem5 ``switch_cpus`` move: a checkpoint taken under one timing
+    model restores under another).
     """
     _check_header(ckpt)
     trace = trace_from_checkpoint(ckpt)
     if machine is None:
         machine = machine_from_dict(ckpt["machine"])
     cfg = dict(ckpt["executor"])
-    cfg.update(overrides)
+    # a None override must not shadow the checkpointed timing model
+    cfg.update({k: v for k, v in overrides.items()
+                if not (k in ("timing", "contention") and v is None)})
     ex = TraceExecutor(machine, **cfg)
     return ex.restore(trace, ckpt["state"])

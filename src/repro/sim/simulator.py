@@ -159,12 +159,17 @@ class Simulator:
                    (e.g. ``SteadyStateWorkload``).
     ``checkpoint_dir`` : when set, CHECKPOINT exits also write
                    ``ckpt_tick<T>.json`` there (see serialize.py).
+    ``timing``   : fidelity model to start under ("detailed" |
+                   "atomic"; default: the board's).  Switch mid-run
+                   with :meth:`switch_timing` — the gem5 ``switch_cpus``
+                   move.
     """
 
     def __init__(self, board, workload, *,
                  checkpoint_dir: Optional[str] = None,
                  record_stats: bool = True, record_timeline: bool = False,
-                 contention: bool = True):
+                 contention: Optional[bool] = None,
+                 timing: Optional[str] = None):
         if isinstance(board, ClusterModel):
             board = Board(machine=board)
         self.board = board.instantiate()     # Simulator owns instantiate()
@@ -179,8 +184,11 @@ class Simulator:
                            else workload.trace())
         self._ex_cfg = dict(record_stats=record_stats,
                             record_timeline=record_timeline,
-                            contention=contention)
+                            contention=contention, timing=timing)
         self._ex = board.executor(**self._ex_cfg)
+        # pin the resolved model: checkpoints/switches restore under it
+        self._ex_cfg["timing"] = self._ex.timing.name
+        self._ex_cfg.pop("contention")
         self._has_markers = any(
             (op.name or "").rpartition("/")[2].startswith(
                 (WORK_BEGIN_PREFIX, WORK_END_PREFIX))
@@ -197,11 +205,16 @@ class Simulator:
     # -- construction from a checkpoint ---------------------------------
     @classmethod
     def from_checkpoint(cls, source, board: Optional[Board] = None, *,
-                        workload=None,
+                        workload=None, timing: Optional[str] = None,
                         checkpoint_dir: Optional[str] = None) -> "Simulator":
         """Resume a serialized simulation, optionally onto a
         re-parameterized ``board`` (the checkpoint-once, sweep-hardware
         workflow).  ``source`` is a path or a checkpoint dict.
+
+        ``timing`` restores under a *different* fidelity model than the
+        checkpoint was taken under (gem5 ``switch_cpus`` through the
+        checkpoint file: atomic fast-forward elsewhere, restore here
+        under "detailed" for the region of interest).
 
         A checkpoint of a *dynamic* workload stores the workload's
         state but not its construction (request streams are code, not
@@ -241,7 +254,11 @@ class Simulator:
                   checkpoint_dir=checkpoint_dir,
                   record_stats=cfg["record_stats"],
                   record_timeline=cfg["record_timeline"],
-                  contention=cfg["contention"])
+                  timing=(timing if timing is not None
+                          else cfg.get("timing")),
+                  contention=(None if timing is not None
+                              or cfg.get("timing") is not None
+                              else cfg.get("contention")))
         overrides = dict(sim._ex_cfg)
         if explicit_board:
             # an explicitly-passed board wins wholesale: it bundles the
@@ -300,7 +317,8 @@ class Simulator:
         return bool(self._marker_exits) or (
             self._dyn is not None and bool(self._dyn.pending_exits))
 
-    def _do_checkpoint(self, requested_tick: int) -> ExitEvent:
+    def _do_checkpoint(self, requested_tick: int,
+                       save: bool = True) -> ExitEvent:
         self._ex.drain()
         from repro.sim import serialize as ser
         ckpt = ser.checkpoint_executor(self._ex)
@@ -309,7 +327,7 @@ class Simulator:
             ckpt[ser.WORKLOAD_KIND_KEY] = type(self._dyn).__name__
         self.last_checkpoint = ckpt
         path = None
-        if self.checkpoint_dir:
+        if save and self.checkpoint_dir:
             path = os.path.join(self.checkpoint_dir,
                                 f"ckpt_tick{ckpt['tick']}.json")
             ser.save_checkpoint(ckpt, path)
@@ -429,6 +447,32 @@ class Simulator:
             pass
         return self.result()
 
+    # -- mid-run fidelity switching ---------------------------------------
+    def switch_timing(self, timing) -> str:
+        """Switch the run to another fidelity model *now* — the gem5
+        ``switch_cpus`` move (§1.3.1): drain the in-flight work,
+        serialize, and restore the very same state under ``timing``
+        ("atomic" | "detailed").  Call between ``run()`` yields (at any
+        exit event) or before the first; subsequent checkpoints resume
+        under the new model.  Returns the resolved model name.
+
+        The canonical sampled-simulation loop::
+
+            sim = Simulator(board, trace, timing="atomic")
+            sim.schedule_max_tick(region_of_interest_start)
+            for ev in sim.run():
+                if ev.kind is ExitEventType.MAX_TICK:
+                    sim.switch_timing("detailed")   # warmed up: go O3
+        """
+        from repro.core.desim.timing import get_timing_model
+        name = get_timing_model(timing).name       # validate early
+        self._ensure_started()
+        if name == self._ex.timing.name:
+            return name                            # already there
+        self._ex_cfg["timing"] = name
+        self._do_checkpoint(self._ex.now, save=False)
+        return name
+
     # -- results / checkpoint API ----------------------------------------
     def save_checkpoint(self, path: Optional[str] = None) -> Dict[str, Any]:
         """Checkpoint *now* (between ``run()`` yields, or before the
@@ -466,3 +510,8 @@ class Simulator:
     @property
     def machine(self) -> ClusterModel:
         return self.board.machine
+
+    @property
+    def timing(self) -> str:
+        """Name of the fidelity model currently driving the run."""
+        return self._ex.timing.name

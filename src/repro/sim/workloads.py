@@ -43,6 +43,14 @@ in-flight request runtimes, and the percentile-stat accumulators; the
 executor side (in-flight/deferred injected ops) rides in the normal
 drain-then-serialize snapshot, so a run restored mid-serving finishes
 bit-identically (tests/test_sim_checkpoint.py).
+
+Fidelity: both workloads inject only per-pod *compute* ops, so they
+are **tick-exact under AtomicTiming** (``timing="atomic"`` — same
+makespan, same decision logs, ~zero engine events; test-enforced in
+tests/test_timing_models.py).  The big serving/FT sweeps
+(``benchmarks/serving_sweep.py``, ``benchmarks/ft_sweep.py``) default
+to atomic with a detailed spot-check for exactly this reason; see
+``docs/fidelity.md``.
 """
 
 from __future__ import annotations

@@ -21,9 +21,13 @@ import os
 
 import pytest
 
+from repro.configs import get_config
 from repro.core.desim.simnodes import TICKS_PER_S
 from repro.core.desim.trace import analytic_trace
-from repro.sim import Simulator, v5e_multipod, v5e_pod, v5e_straggler
+from repro.sim import (ServeSim, ServingCost, Simulator, TrainSim,
+                       TrainStepCost, poisson_requests, v5e_multipod,
+                       v5e_pod, v5e_serving, v5e_straggler, v5e_unreliable)
+from repro.train.ft_policy import FTPolicy
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
@@ -39,14 +43,41 @@ def _mixed_trace(tail=False):
                           tail_collectives=DCN_TAIL if tail else ())
 
 
-# name -> (board builder, trace builder); three canonical runs covering
-# the single-pod torus, the multipod DCN/quantum path, and straggler
-# injection
+def _serve_workload(board):
+    """A short, fully-seeded serving run (dynamic-workload golden)."""
+    cost = ServingCost.from_params(7e9, layers=32, d_model=4096,
+                                   chips=board.machine.num_chips)
+    reqs = poisson_requests(12, 40.0, seed=7, prompt_len=(32, 128),
+                            decode_len=(8, 24))
+    return ServeSim(cost=cost, requests=reqs, slots=4, seq_capacity=256,
+                    slo_ttft_s=0.01, slo_latency_s=1.0)
+
+
+def _train_workload(board):
+    """A short fault-injected training run (dynamic-workload golden)."""
+    pol = FTPolicy(get_config("deepseek-67b"), num_steps=20,
+                   ckpt_interval=5, pods=2,
+                   chips_per_pod=board.machine.pod.num_chips,
+                   dead_after_misses=1)
+    cost = TrainStepCost.from_params(1e9, tokens_per_batch=100_000,
+                                     chips=board.machine.num_chips)
+    return TrainSim(cost=cost, policy=pol,
+                    schedule=board.failure_schedule)
+
+
+# name -> (board builder, workload builder); canonical runs covering
+# the single-pod torus, the multipod DCN/quantum path, straggler
+# injection, and the two dynamic workloads (serving + FT training)
 CASES = {
-    "pod_torus": (lambda: v5e_pod(), lambda: _mixed_trace()),
-    "multipod_dcn": (lambda: v5e_multipod(2), lambda: _mixed_trace(True)),
+    "pod_torus": (lambda: v5e_pod(), lambda b: _mixed_trace()),
+    "multipod_dcn": (lambda: v5e_multipod(2), lambda b: _mixed_trace(True)),
     "straggler": (lambda: v5e_straggler(2, 2.0),
-                  lambda: _mixed_trace(True)),
+                  lambda b: _mixed_trace(True)),
+    "serve_sim": (lambda: v5e_serving(4, 4), _serve_workload),
+    "train_sim": (lambda: v5e_unreliable(2, seed=5, horizon=120,
+                                         mtbf=30.0, repair=(5, 15),
+                                         nx=8, ny=8),
+                  _train_workload),
 }
 
 
@@ -62,16 +93,21 @@ def _fmt(v):
 
 
 def _render(name: str) -> str:
-    board_fn, trace_fn = CASES[name]
+    board_fn, workload_fn = CASES[name]
     board = board_fn()
-    sim = Simulator(board, trace_fn(), record_stats=True)
+    sim = Simulator(board, workload_fn(board), record_stats=True)
     res = sim.run_to_completion()
+    stats = dict(res.stats)
+    if sim.workload is not None:
+        # dynamic workloads carry their own stats tree (TTFT
+        # percentiles, goodput, ...) — golden-diff it too
+        stats.update(sim.workload.stats.flat())
     lines = [f"case: {name}",
              f"board: {board.name}",
              f"final_tick: {int(round(res.makespan_s * TICKS_PER_S))}",
              f"events: {res.events}",
              "---------- Begin Simulation Statistics ----------"]
-    for k, v in sorted(res.stats.items()):
+    for k, v in sorted(stats.items()):
         lines.append(f"{k:<48} {_fmt(v)}")
     lines.append("---------- End Simulation Statistics ----------")
     return "\n".join(lines) + "\n"

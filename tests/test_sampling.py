@@ -86,6 +86,28 @@ def test_atomic_ff_mode_uses_roofline_estimate():
     assert res.predicted_total_s == pytest.approx(full.makespan_s, rel=0.3)
 
 
+def test_fast_forward_accumulates_real_stats():
+    """The in-engine rewrite's headline: fast-forwarded steps execute
+    for real at atomic fidelity, so the stats tree covers EVERY op of
+    EVERY step — no extrapolated dead zones."""
+    step = _step(layers=4)
+    num_steps = 60
+    res = sampled_run(v5e_pod(), step, num_steps,
+                      SamplePlan(warmup=1, interval=12, window=1))
+    assert res.detailed_op_fraction < 0.25       # mostly fast-forwarded
+    assert res.stats is not None
+    assert res.stats["sim.chip0.ops_executed"] == 4 * num_steps
+    assert res.stats["sim.wire0.collectives"] == 4 * num_steps
+    # chain-structured steps: atomic FF is tick-exact, so the sampled
+    # run's final tick EQUALS the full-detail run's
+    full = v5e_pod().executor().execute(repeat_trace(step, num_steps))
+    assert res.predicted_total_s == full.makespan_s
+
+
 def test_sampling_rejects_bad_ff_mode():
     with pytest.raises(ValueError, match="ff_mode"):
         SampledSimulation(v5e_pod(), _step(), 10, ff_mode="psychic")
+    # the analytical extrapolation mode was removed with the in-engine
+    # rewrite; the error says where to look
+    with pytest.raises(ValueError, match="in-engine"):
+        SampledSimulation(v5e_pod(), _step(), 10, ff_mode="extrapolate")

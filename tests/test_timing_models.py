@@ -1,0 +1,347 @@
+"""Pluggable timing models (repro.core.desim.timing): atomic==detailed
+on contention-free traces, the gem5-style mid-run switch (atomic
+fast-forward + switch-to-detailed == detailed-from-start), checkpoint/
+restore across a model switch, dynamic workloads at atomic fidelity,
+and the EventQueue negative-tick guards."""
+
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.timing import (AtomicTiming, DetailedTiming,
+                                     get_timing_model)
+from repro.core.desim.trace import analytic_trace
+from repro.core.events import EventQueue
+from repro.sim import (ExitEventType, ServeSim, ServingCost, Simulator,
+                       TrainSim, TrainStepCost, checkpoint_executor,
+                       poisson_requests, repeat_trace, restore_executor,
+                       v5e_multipod, v5e_pod, v5e_serving, v5e_unreliable)
+from repro.train.ft_policy import FTPolicy
+
+COLLS = [{"kind": "all-reduce", "bytes": 2e8, "participants": 256}]
+DCN_TAIL = [{"kind": "all-reduce", "bytes": 1e9, "participants": 512,
+             "scope": "dcn"}]
+
+
+def _chain_trace(steps=10, layers=6, tail=False):
+    """Chain-dependency trace: contention-free by construction (no two
+    collectives ever share a link in flight), the regime where atomic
+    and detailed timing are exactly equal."""
+    step = analytic_trace("step", layers, 1e12, 1e9, COLLS,
+                          tail_collectives=DCN_TAIL if tail else ())
+    return repeat_trace(step, steps)
+
+
+def _stats_sans_links(stats):
+    """links_used counts materialized LinkState objects — a detailed-
+    implementation detail atomic legitimately reports as 0."""
+    return {k: v for k, v in stats.items() if not k.endswith("links_used")}
+
+
+# ---------------------------------------------------------------------------
+# atomic == detailed on contention-free traces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("board_fn", [
+    lambda: v5e_pod(),
+    lambda: v5e_multipod(2, quantum_ns=0),
+    lambda: v5e_multipod(2, quantum_ns=0, nx=8, ny=8),
+])
+def test_atomic_equals_detailed_on_contention_free_trace(board_fn):
+    trace = _chain_trace(steps=5, tail=board_fn().machine.num_pods > 1)
+    det = board_fn().executor(timing="detailed",
+                              record_stats=True).execute(trace)
+    atm = board_fn().executor(timing="atomic",
+                              record_stats=True).execute(trace)
+    assert atm.makespan_s == det.makespan_s          # identical final tick
+    assert atm.compute_s == det.compute_s
+    assert atm.collective_s == det.collective_s
+    assert _stats_sans_links(atm.stats) == _stats_sans_links(det.stats)
+
+
+def test_atomic_with_stragglers_matches_detailed():
+    board = v5e_multipod(2, quantum_ns=0)
+    trace = _chain_trace(steps=4, tail=True)
+    det = board.executor(timing="detailed",
+                         straggler_slowdowns=[1.0, 2.5]).execute(trace)
+    atm = board.executor(timing="atomic",
+                         straggler_slowdowns=[1.0, 2.5]).execute(trace)
+    assert atm.makespan_s == det.makespan_s
+
+
+def test_atomic_fires_vastly_fewer_engine_events():
+    """The perf headline: atomic resolves completions on its own batch
+    heap — >=10x fewer engine events than detailed (in practice ~zero
+    for a static trace)."""
+    trace = _chain_trace(steps=10, tail=True)
+    det = v5e_multipod(2, quantum_ns=0).executor().execute(trace)
+    atm = v5e_multipod(2, quantum_ns=0).executor(
+        timing="atomic").execute(trace)
+    assert det.events >= 10 * max(atm.events, 1)
+
+
+def test_atomic_is_a_lower_bound_under_contention():
+    """On a CONTENDED trace atomic is approximate: contention-free op
+    costs can only finish earlier (never later) than detailed."""
+    from repro.core.desim.trace import HloTrace, TraceOp
+    t = HloTrace("contend")
+    t.ops.append(TraceOp(kind="compute", flops=1e12, bytes=1e9))
+    for i in range(3):       # three concurrent whole-pod collectives
+        t.ops.append(TraceOp(kind="all-gather", coll_bytes=1e8,
+                             participants=256, deps=(0,), name=f"ag{i}"))
+    det = v5e_pod().executor().execute(t)
+    atm = v5e_pod().executor(timing="atomic").execute(t)
+    assert atm.makespan_s < det.makespan_s
+
+
+def test_contention_false_maps_to_atomic_with_deprecation():
+    board = v5e_pod()
+    with pytest.warns(DeprecationWarning, match="timing='atomic'"):
+        ex = TraceExecutor(board.machine, contention=False)
+    assert ex.timing.name == "atomic"
+    assert ex.contention is False
+    # an explicit timing choice wins without warning
+    ex2 = TraceExecutor(board.machine, contention=False, timing="detailed")
+    assert ex2.timing.name == "detailed" and ex2.contention is True
+
+
+def test_boards_carry_a_default_timing_model():
+    assert v5e_pod().executor().timing.name == "detailed"
+    assert v5e_pod(timing="atomic").executor().timing.name == "atomic"
+    # caller overrides the board default
+    assert v5e_pod(timing="atomic").executor(
+        timing="detailed").timing.name == "detailed"
+    sim = Simulator(v5e_pod(timing="atomic"), _chain_trace(steps=1))
+    assert sim.timing == "atomic"
+    # an explicit contention request (even the legacy True form) beats
+    # an atomic board default — it asks for contention simulation
+    ex = v5e_pod(timing="atomic").executor(contention=True)
+    assert ex.timing.name == "detailed" and ex.contention is True
+
+
+def test_get_timing_model_resolution():
+    assert isinstance(get_timing_model("atomic"), AtomicTiming)
+    assert isinstance(get_timing_model(DetailedTiming), DetailedTiming)
+    inst = AtomicTiming()
+    assert get_timing_model(inst) is inst
+    with pytest.raises(ValueError, match="timing model"):
+        get_timing_model("psychic")
+
+
+# ---------------------------------------------------------------------------
+# the gem5 switch_cpus move: mid-run switching
+# ---------------------------------------------------------------------------
+
+def test_atomic_fast_forward_then_switch_matches_detailed_from_start():
+    """The headline invariant: atomic fast-forward to tick T + switch
+    to detailed == a detailed-from-start run, final tick AND post-T
+    stats (full tree, since atomic==detailed pre-T on this trace)."""
+    trace = _chain_trace(steps=10)
+    ref = Simulator(v5e_pod(), trace).run_to_completion()
+
+    sim = Simulator(v5e_pod(), trace, timing="atomic")
+    T = int(ref.makespan_s * 1e9 * 0.4)
+    sim.schedule_max_tick(T)
+    saw_switch = False
+    for ev in sim.run():
+        if ev.kind is ExitEventType.MAX_TICK:
+            assert sim.timing == "atomic"
+            assert sim.switch_timing("detailed") == "detailed"
+            assert sim.timing == "detailed"
+            saw_switch = True
+    assert saw_switch
+    res = sim.result()
+    assert res.makespan_s == ref.makespan_s
+    assert res.stats == ref.stats
+
+
+def test_switch_is_idempotent_and_validated():
+    sim = Simulator(v5e_pod(), _chain_trace(steps=2))
+    assert sim.switch_timing("detailed") == "detailed"   # no-op
+    with pytest.raises(ValueError, match="timing model"):
+        sim.switch_timing("psychic")
+    assert sim.run_to_completion().makespan_s > 0
+
+
+def test_checkpoint_restores_under_a_different_model(tmp_path):
+    """A checkpoint taken under atomic restores under detailed — in
+    memory and through the JSON file — bit-identically to the
+    in-memory switch and to detailed-from-start."""
+    trace = _chain_trace(steps=8)
+    board = v5e_pod()
+    ref = board.executor(record_stats=True).execute(trace)
+
+    ex = board.executor(timing="atomic", record_stats=True)
+    ex.begin(trace)
+    ex.advance(max_tick=int(ref.makespan_s * 1e9 * 0.4))
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    assert ckpt["executor"]["timing"] == "atomic"
+    assert ckpt["state"]["timing"] == "atomic"
+
+    # in-memory cross-model restore
+    ex2 = restore_executor(ckpt, record_stats=True, timing="detailed")
+    assert ex2.timing.name == "detailed"
+    ex2.advance()
+    res = ex2.result()
+    assert res.makespan_s == ref.makespan_s
+    assert res.stats == ref.stats
+
+    # ...and through the file (save -> load -> restore)
+    from repro.sim import load_checkpoint, save_checkpoint
+    path = save_checkpoint(ckpt, os.path.join(str(tmp_path), "c.json"))
+    ex3 = restore_executor(load_checkpoint(path), record_stats=True,
+                           timing="detailed")
+    ex3.advance()
+    assert ex3.result().makespan_s == res.makespan_s
+    assert ex3.result().stats == res.stats
+
+    # Simulator.from_checkpoint grows the same switch
+    sim = Simulator.from_checkpoint(path, timing="detailed")
+    assert sim.timing == "detailed"
+    assert sim.run_to_completion().makespan_s == ref.makespan_s
+
+
+def test_checkpoint_without_timing_override_keeps_model():
+    trace = _chain_trace(steps=4)
+    ex = v5e_pod().executor(timing="atomic")
+    ex.begin(trace)
+    ex.advance(max_tick=10_000_000)
+    ex.drain()
+    ex2 = restore_executor(checkpoint_executor(ex))
+    assert ex2.timing.name == "atomic"
+    ex2.advance()
+    assert ex2.result().makespan_s > 0
+
+
+def test_atomic_checkpoint_restore_identity():
+    """The PR-2 identity invariant holds at atomic fidelity too: a
+    paused/drained/serialized/restored atomic run finishes exactly like
+    an uninterrupted one (incl. a partial DCN rendezvous)."""
+    board = v5e_multipod(2, quantum_ns=0)
+    trace = _chain_trace(steps=6, tail=True)
+    ref = board.executor(timing="atomic", record_stats=True,
+                         straggler_slowdowns=[1.0, 3.0]).execute(trace)
+    ex = board.executor(timing="atomic", record_stats=True,
+                        straggler_slowdowns=[1.0, 3.0])
+    ex.begin(trace)
+    ex.advance(max_tick=int(ref.makespan_s * 1e9 * 0.6))
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    ex2 = restore_executor(ckpt, record_stats=True)
+    ex2.advance()
+    res = ex2.result()
+    assert res.makespan_s == ref.makespan_s
+    assert res.stats == ref.stats
+
+
+# ---------------------------------------------------------------------------
+# dynamic workloads at atomic fidelity
+# ---------------------------------------------------------------------------
+
+def _serve(num_requests=30):
+    cost = ServingCost.from_params(70e9, layers=80, d_model=8192, chips=64)
+    reqs = poisson_requests(num_requests, 30.0, seed=13,
+                            prompt_len=(64, 256), decode_len=(8, 48))
+    return ServeSim(cost=cost, requests=reqs, slots=4, seq_capacity=512)
+
+
+def test_servesim_runs_identically_under_atomic():
+    """Serving injects pure per-pod compute ops, so atomic is EXACT:
+    same makespan, same decision logs, ~zero engine events — the big
+    serving sweeps can default to atomic."""
+    out = {}
+    for timing in ("detailed", "atomic"):
+        srv = _serve()
+        sim = Simulator(v5e_serving(8, 8), srv, timing=timing)
+        res = sim.run_to_completion()
+        out[timing] = (res.makespan_s, res.events, srv.summary(),
+                       [s.decisions for s in srv.schedulers])
+    det, atm = out["detailed"], out["atomic"]
+    assert atm[0] == det[0]
+    assert atm[2] == det[2]
+    assert atm[3] == det[3]
+    assert det[1] >= 10 * max(atm[1], 1)
+
+
+def test_trainsim_runs_identically_under_atomic():
+    board = v5e_unreliable(2, seed=3, horizon=300, mtbf=60.0,
+                           repair=(10, 30))
+    out = {}
+    for timing in ("detailed", "atomic"):
+        pol = FTPolicy(get_config("deepseek-67b"), num_steps=40,
+                       ckpt_interval=8, pods=2,
+                       chips_per_pod=board.machine.pod.num_chips,
+                       dead_after_misses=1)
+        ts = TrainSim(cost=TrainStepCost.from_params(
+            7e9, tokens_per_batch=500_000, chips=board.machine.num_chips),
+            policy=pol, schedule=board.failure_schedule)
+        res = Simulator(board, ts, timing=timing).run_to_completion()
+        out[timing] = (res.makespan_s, res.events, ts.summary(),
+                       [d.kind for d in pol.decisions])
+    det, atm = out["detailed"], out["atomic"]
+    assert atm[0] == det[0]
+    assert atm[2] == det[2]
+    assert atm[3] == det[3] and atm[3]          # decisions happened
+    assert det[1] >= 10 * max(atm[1], 1)
+
+
+def test_dynamic_atomic_checkpoint_roundtrip():
+    """ServeSim under atomic checkpoints mid-run and resumes
+    bit-identically (the drain/serialize path is model-agnostic)."""
+    ref_srv = _serve()
+    ref_sim = Simulator(v5e_serving(8, 8), ref_srv, timing="atomic")
+    ref_res = ref_sim.run_to_completion()
+
+    srv = _serve()
+    sim = Simulator(v5e_serving(8, 8), srv, timing="atomic")
+    sim.schedule_checkpoint(int(ref_res.makespan_s * 1e9 * 0.4))
+    kinds = [ev.kind for ev in sim.run()]
+    assert ExitEventType.CHECKPOINT in kinds
+    assert json.dumps(sim.last_checkpoint, allow_nan=False)
+    assert sim.result().makespan_s == ref_res.makespan_s
+    assert srv.summary() == ref_srv.summary()
+    assert [s.decisions for s in srv.schedulers] == \
+        [s.decisions for s in ref_srv.schedulers]
+
+
+# ---------------------------------------------------------------------------
+# satellite: EventQueue rejects events landing in the past
+# ---------------------------------------------------------------------------
+
+def test_schedule_rejects_negative_tick():
+    q = EventQueue()
+    with pytest.raises(ValueError, match="negative tick"):
+        q.schedule(lambda: None, -1)
+    with pytest.raises(ValueError, match="negative tick"):
+        q.schedule(lambda: None, -10 ** 12, name="way-back")
+
+
+def test_schedule_after_rejects_negative_delay():
+    q = EventQueue()
+    q.schedule(lambda: None, 50)
+    q.run()
+    assert q.now == 50
+    with pytest.raises(ValueError, match="negative delay"):
+        q.schedule_after(lambda: None, -5)
+    # a negative absolute tick is still caught once now > 0
+    with pytest.raises(ValueError, match="negative tick"):
+        q.schedule(lambda: None, -5)
+    # and scheduling before ``now`` names the past, not negativity
+    with pytest.raises(ValueError, match="in the past"):
+        q.schedule(lambda: None, 10)
+
+
+def test_run_max_tick_never_rewinds_now():
+    q = EventQueue()
+    q.schedule(lambda: None, 100)
+    q.run()
+    assert q.now == 100
+    q.schedule(lambda: None, 200)
+    q.run(max_tick=50)          # already past 50: must not go backwards
+    assert q.now == 100
+    q.run()
+    assert q.now == 200

@@ -18,6 +18,11 @@
 #                            # tests/golden/*.txt (regen with
 #                            # `pytest tests/test_golden_stats.py
 #                            #  --regen-golden`, then review + commit)
+#   tools/ci.sh perf         # perf-smoke tier: asserts AtomicTiming is
+#                            # >= 3x faster wall-clock than Detailed-
+#                            # Timing on the pod_torus reference trace
+#                            # (and tick-exact there) — fails loudly if
+#                            # the fast path regresses
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -25,6 +30,12 @@ if [ "${1-}" = "golden" ]; then
   shift
   python -m pytest -q tests/test_golden_stats.py "$@"
   echo "golden tier OK"
+  exit 0
+fi
+if [ "${1-}" = "perf" ]; then
+  shift
+  python -m benchmarks.engine_microbench --assert-speedup 3
+  echo "perf tier OK"
   exit 0
 fi
 if [ "${1-}" = "smoke" ]; then
