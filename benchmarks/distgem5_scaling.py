@@ -4,14 +4,59 @@ engine's barrier overhead vs quantum length (dense lockstep ``run`` vs
 the work-skipping ``run_until_drained`` the trace executor uses),
 (b) DES-predicted step time vs pod count for a fixed per-pod workload
 (weak scaling: the hierarchical DCN all-reduce is the scaling cost),
-with the engine's own event/stat counters as the derived columns."""
+(c) the multiprocess ``ParallelEngine``'s wall-clock scaling on a
+16-pod board across a quantum x workers grid — each row records the
+speedup over the serial TraceExecutor and asserts tick-exactness (the
+dist-gem5 bar: parallelism must change wall clock only, never the
+simulated numbers).
+
+    python -m benchmarks.distgem5_scaling --assert-parallel 2
+        CI parallel tier (tools/ci.sh parallel): fail loudly unless
+        workers=4 is >= 2x faster than serial AND bit-exact.
+"""
 
 from __future__ import annotations
+
+import sys
+import time
 
 from benchmarks.common import emit, time_us
 from repro.core.desim.trace import analytic_trace
 from repro.core.events import EventQueue, QuantumSync
-from repro.sim import v5e_multipod, v5e_pod
+from repro.sim import run_parallel, v5e_multipod, v5e_pod
+
+# the multiprocess-scaling workload: one homogeneous 32-pod board, a
+# step with per-layer ICI all-reduces and a DCN tail collective (so the
+# sync path — quantum barriers + coordinator rendezvous — is exercised,
+# not just the embarrassing free-run path).  The wall-clock win on a
+# homogeneous board comes from SPMD clone folding (each worker
+# simulates one representative pod per clone class), so the speedup
+# survives even a single-CPU CI container.
+PARALLEL_PODS = 32
+
+
+def _parallel_board(quantum_ns: int = 100_000):
+    return v5e_multipod(PARALLEL_PODS, quantum_ns=quantum_ns, nx=8, ny=8)
+
+
+def _parallel_trace():
+    return analytic_trace(
+        "step", 96, 2e13, 2e10,
+        [{"kind": "all-reduce", "bytes": 2e8, "participants": 64}],
+        tail_collectives=[{"kind": "all-reduce", "bytes": 1e9,
+                           "participants": 64 * PARALLEL_PODS,
+                           "scope": "dcn"}])
+
+
+def _measure_parallel(workers: int, quantum_ns: int):
+    board = _parallel_board(quantum_ns)
+    t0 = time.perf_counter()
+    if workers <= 1:
+        res = board.executor(record_stats=True).execute(_parallel_trace())
+    else:
+        res = run_parallel(board, _parallel_trace(), workers=workers,
+                           record_stats=True)
+    return time.perf_counter() - t0, res
 
 
 def run() -> None:
@@ -49,3 +94,57 @@ def run() -> None:
         emit(f"distgem5/step_{pods}pods", res.makespan_s * 1e6,
              f"exposed_coll_s={res.exposed_collective_s:.3f} "
              f"events={res.events} dcn_colls={dcn_colls}")
+
+    # (c) multiprocess scaling: quantum x workers grid, speedup vs the
+    # serial engine on the same board/trace, exactness asserted per row
+    for quantum_ns in (10_000, 100_000, 1_000_000):
+        w_serial, ref = _measure_parallel(1, quantum_ns)
+        emit(f"distgem5/par_q{quantum_ns}_w1", w_serial * 1e6,
+             f"pods={PARALLEL_PODS} makespan={ref.makespan_s:.4f}s "
+             f"events={ref.events}")
+        for workers in (2, 4, 8):
+            wall, res = _measure_parallel(workers, quantum_ns)
+            exact = res == ref
+            emit(f"distgem5/par_q{quantum_ns}_w{workers}", wall * 1e6,
+                 f"speedup={w_serial / max(wall, 1e-9):.2f}x "
+                 f"exact={exact}")
+            if not exact:
+                raise AssertionError(
+                    f"parallel run (workers={workers}, "
+                    f"quantum={quantum_ns}) diverged from serial")
+
+
+def assert_parallel(threshold: float, workers: int = 4,
+                    quantum_ns: int = 100_000) -> None:
+    """CI parallel tier: fail loudly unless the multiprocess engine is
+    both >= ``threshold``x faster than serial on the 16-pod reference
+    workload AND tick-exact (full ExecResult equality, stats tree
+    included)."""
+    w_serial, ref = _measure_parallel(1, quantum_ns)
+    w_par, res = _measure_parallel(workers, quantum_ns)
+    speedup = w_serial / max(w_par, 1e-9)
+    print(f"parallel-smoke [{PARALLEL_PODS} pods, quantum={quantum_ns}ns]: "
+          f"serial {w_serial * 1e3:.0f}ms vs workers={workers} "
+          f"{w_par * 1e3:.0f}ms -> {speedup:.1f}x wall "
+          f"(threshold {threshold:.1f}x)")
+    if res != ref:
+        print("parallel-smoke FAILED: multiprocess run diverged from the "
+              "serial engine (must be bit-identical — makespan "
+              f"{res.makespan_s} vs {ref.makespan_s})", file=sys.stderr)
+        raise SystemExit(1)
+    if speedup < threshold:
+        print(f"parallel-smoke FAILED: workers={workers} is only "
+              f"{speedup:.1f}x faster than serial (need >= "
+              f"{threshold:.1f}x) — pod sharding or SPMD clone folding "
+              "regressed", file=sys.stderr)
+        raise SystemExit(1)
+    print("parallel-smoke OK")
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--assert-parallel" in args:
+        i = args.index("--assert-parallel")
+        assert_parallel(float(args[i + 1]))
+    else:
+        run()

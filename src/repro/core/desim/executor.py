@@ -134,7 +134,9 @@ class TraceExecutor:
                  record_timeline: bool = False,
                  straggler_slowdowns: Optional[List[float]] = None,
                  record_stats: bool = False,
-                 contention: Optional[bool] = None, timing=None):
+                 contention: Optional[bool] = None, timing=None,
+                 pod_labels: Optional[List[int]] = None,
+                 dcn_capture: Optional[Callable[[dict], None]] = None):
         self.machine = machine
         self.algorithm = algorithm
         self.alg = get_algorithm(algorithm)
@@ -161,6 +163,24 @@ class TraceExecutor:
         self.slow = (straggler_slowdowns or [1.0] * pods)[:pods]
         while len(self.slow) < pods:
             self.slow.append(1.0)
+        # Shard support (repro.core.desim.parallel): a worker process
+        # simulates a SLICE of a larger machine, so its local pod p is
+        # globally ``pod_labels[p]`` — SimObject/queue names use the
+        # global label (stats subtrees land at their global path), and
+        # run-wide accounting (totals/timeline/op_hook, once per static
+        # op) happens on whichever local pod carries global label 0.
+        if pod_labels is None:
+            pod_labels = list(range(pods))
+        if len(pod_labels) != pods:
+            raise ValueError(f"pod_labels has {len(pod_labels)} entries "
+                             f"for a {pods}-pod machine")
+        self.pod_labels = [int(g) for g in pod_labels]
+        self._account_local = (self.pod_labels.index(0)
+                               if 0 in self.pod_labels else -1)
+        # When set, cross-pod (dcn) arrivals are handed to this callback
+        # instead of the in-process rendezvous — the parallel engine's
+        # coordinator owns the shared fabric.
+        self._dcn_capture = dcn_capture
         self.sim_root: Optional[ClusterSim] = None
         self.op_hook: Optional[OpHook] = None
         self.injection_hook: Optional[InjectionHook] = None
@@ -174,19 +194,21 @@ class TraceExecutor:
         root = ClusterSim("sim", num_pods=m.num_pods,
                           quantum_ns=m.quantum_ns)
         dcn = DcnSim("dcn", m, self.dcn_alg, queues, sync,
-                     num_pods=m.num_pods, contention=self.contention)
+                     num_pods=m.num_pods, contention=self.contention,
+                     capture=self._dcn_capture)
         root.dcn = dcn
         chips: List[ChipSim] = []
         wires: List[WireSim] = []
         for p in range(m.num_pods):
-            chip = ChipSim(f"chip{p}", m.pod.chip, queues[p],
+            g = self.pod_labels[p]
+            chip = ChipSim(f"chip{g}", m.pod.chip, queues[p],
                            pod_id=p, slowdown=self.slow[p])
-            wire = WireSim(f"wire{p}", m, self.alg, queues[p],
+            wire = WireSim(f"wire{g}", m, self.alg, queues[p],
                            pod_id=p, contention=self.contention)
             chip.coll_port.connect(wire.chip_port)
             wire.dcn_port.connect(dcn.pod_ports[p])
-            setattr(root, f"chip{p}", chip)
-            setattr(root, f"wire{p}", wire)
+            setattr(root, f"chip{g}", chip)
+            setattr(root, f"wire{g}", wire)
             chips.append(chip)
             wires.append(wire)
         root.instantiate()
@@ -206,7 +228,8 @@ class TraceExecutor:
         pods = m.num_pods
         nops = len(trace.ops)
         self._trace = trace
-        self._queues = [EventQueue(f"pod{p}") for p in range(pods)]
+        self._queues = [EventQueue(f"pod{self.pod_labels[p]}")
+                        for p in range(pods)]
         self.timing.reset(self)
         needs_dcn = any(self._routes_dcn(op) for op in trace.ops)
         # quantum_ns == 0 means "no quantum error model": dcn ops then
@@ -343,10 +366,11 @@ class TraceExecutor:
         # processing the appended entry here would double-decrement
         dependents = list(self._dependents[idx])
         # totals/timeline count each op once: on pod 0 for static SPMD
-        # ops (every pod runs a replica), on the owning pod for
-        # injected ops (they run exactly once)
+        # ops (every pod runs a replica; in a parallel shard, on the
+        # local pod carrying global label 0 — other shards skip), on
+        # the owning pod for injected ops (they run exactly once)
         owner = self._injected.get(idx)
-        if p == (0 if owner is None else owner):
+        if p == (self._account_local if owner is None else owner):
             dur = payload.get("dur")
             dur_s = (dur if dur is not None else end - start) \
                 / TICKS_PER_S

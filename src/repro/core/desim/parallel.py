@@ -1,0 +1,821 @@
+"""dist-gem5-style multiprocess pod sharding (gem5-20 paper §2.17, §4).
+
+The paper credits dist-gem5 — partitioning the simulated system across
+parallel gem5 processes that exchange network traffic only at
+synchronization quanta — as what makes cluster-scale simulation
+practical.  Our engine has the exact decomposition dist-gem5 needs (one
+``EventQueue`` per pod, all cross-pod traffic batched onto quantum
+boundaries by ``QuantumSync``, a drain/serialize cut with no in-flight
+messages), so :class:`ParallelEngine` shards the machine's pods across
+N worker processes:
+
+* Each **worker** owns a contiguous pod range and runs a real
+  :class:`TraceExecutor` over a shard-sized copy of the machine
+  (``pod_labels`` keeps the global pod identities).  Between quantum
+  barriers the worker advances its local queues with zero coordination.
+* The **coordinator** (this process) owns the one true DCN fabric: it
+  mirrors ``QuantumSync.run_until_drained``'s boundary arithmetic
+  bit-for-bit (the shared helpers in ``repro.core.events``), collects
+  cross-pod arrivals that workers capture via the ``DcnSim`` capture
+  hook, replays the rendezvous/uplink/stat updates in the serial
+  engine's canonical order, and broadcasts completion deliveries back —
+  pipes carry only rendezvous metadata, never simulation objects.
+* **SPMD clone folding**: within a shard, pods whose straggler slowdown
+  (and, on restore, whole serialized per-pod state) are identical evolve
+  identically — per-pod evolution is a pure function of (trace, machine,
+  slowdown, dcn completion schedule), and the completion schedule is
+  broadcast to every pod.  Each class is simulated once and its results
+  replicated, so a homogeneous 16-pod board costs 16/N pod-simulations
+  across N workers.  This is what delivers wall-clock speedup even on a
+  single core; on multicore the processes additionally run concurrently.
+
+Exactness (test-enforced, see docs/parallel.md): with detailed timing
+and a positive quantum, final tick, full stats tree, checkpoint dicts
+and decision logs are bit-identical to the serial engine.  The engine
+falls back to the in-process serial path when sharding cannot be exact:
+dynamic workloads (``inject_op`` feedback couples pods through the
+host), dcn traffic under atomic timing or ``quantum_ns == 0`` (exact-
+tick delivery needs the global tick-ordered merge), the
+``hierarchical`` intra-pod algorithm (its cost depends on the global
+pod count), or fewer than 2 pods/workers.
+
+Checkpoints are worker-count-agnostic: collection loads worker state
+into a dormant serial facade executor and calls its ``snapshot()``
+verbatim, so a ``workers=4`` checkpoint restores under ``workers=1``
+and vice versa (the restore path slices the same serial format).
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing as mp
+import traceback
+import weakref
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.desim.executor import ExecResult, TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.simnodes import TICKS_PER_S, to_ticks
+from repro.core.desim.trace import HloTrace
+from repro.core.events import quantum_boundary, quantum_delivery
+
+__all__ = ["ParallelEngine", "plan_shards", "fold_pods"]
+
+
+# ---------------------------------------------------------------------------
+# shard planning / clone folding
+# ---------------------------------------------------------------------------
+
+def plan_shards(num_pods: int, workers: int) -> List[List[int]]:
+    """Contiguous, balanced pod ranges — one per worker (clamped to
+    ``num_pods``: a worker needs at least one pod)."""
+    workers = max(1, min(int(workers), int(num_pods)))
+    base, extra = divmod(num_pods, workers)
+    shards, lo = [], 0
+    for w in range(workers):
+        size = base + (1 if w < extra else 0)
+        shards.append(list(range(lo, lo + size)))
+        lo += size
+    return shards
+
+
+def fold_pods(shard: List[int], keys: Dict[int, Any]
+              ) -> Tuple[List[int], List[List[int]]]:
+    """Group a shard's pods into SPMD clone classes by fold key.
+
+    Returns ``(reps, members)``: ``reps[i]`` is the representative
+    (first) pod of class ``i`` — the one actually simulated — and
+    ``members[i]`` the ascending global pod ids its results replicate
+    to.  Pods with distinct keys (different slowdown, or different
+    restored state) never fold."""
+    reps: List[int] = []
+    members: List[List[int]] = []
+    index: Dict[Any, int] = {}
+    for g in shard:
+        k = keys[g]
+        i = index.get(k)
+        if i is None:
+            index[k] = len(reps)
+            reps.append(g)
+            members.append([g])
+        else:
+            members[i].append(g)
+    return reps, members
+
+
+def _pod_state_key(state: Dict[str, Any], g: int) -> str:
+    """Canonical fingerprint of pod ``g``'s slice of a serial snapshot —
+    pods may fold on restore only when their entire state matches."""
+    children = state.get("stats", {}).get("children", {})
+    row = {
+        "op_end": state["op_end"][g],
+        "queue": state["queues"][g],
+        "chip_free": state["chip_free"][g],
+        "wires": state["wires"][g] if g < len(state.get("wires", [])) else [],
+        "wire_busy": state.get("wire_busy", [0] * (g + 1))[g],
+        "deferred": [[idx, r] for p, idx, r in state.get("deferred", [])
+                     if p == g],
+        "rendezvous": [[r["op_idx"], a[1]] for r in state.get("rendezvous", [])
+                       for a in r["arrivals"] if a[0] == g],
+        "chip_stats": children.get(f"chip{g}"),
+        "wire_stats": children.get(f"wire{g}"),
+    }
+    return json.dumps(row, sort_keys=True)
+
+
+def _slice_state(state: Dict[str, Any], reps: List[int],
+                 owns0: bool) -> Dict[str, Any]:
+    """Shard-shaped serial snapshot holding only the representative
+    pods' rows (the worker restores it through the ordinary
+    ``TraceExecutor.restore``).  Run-wide accumulators (totals,
+    timeline) go to the worker owning global pod 0; the shared-fabric
+    state (dcn uplinks, rendezvous metadata, dcn stats) stays with the
+    coordinator."""
+    local = {g: i for i, g in enumerate(reps)}
+    children = state.get("stats", {}).get("children", {})
+    out: Dict[str, Any] = {
+        "tick": state["tick"],
+        "timing": state["timing"],
+        "pod_dims": list(state.get("pod_dims", [])),
+        "queues": [dict(state["queues"][g]) for g in reps],
+        "op_end": [list(state["op_end"][g]) for g in reps],
+        "deferred": [[local[p], int(idx), int(r)]
+                     for p, idx, r in state.get("deferred", [])
+                     if p in local],
+        "injected": [],
+        "inject_floor": [],
+        "rendezvous": [],
+        "chip_free": [state["chip_free"][g] for g in reps],
+        "wires": [state["wires"][g] for g in reps],
+        "wire_busy": [int(state["wire_busy"][g]) for g in reps]
+        if state.get("wire_busy") else [],
+        "dcn_uplinks": [],
+        "stats": {"stats": {},
+                  "children": {f"{kind}{g}": children[f"{kind}{g}"]
+                               for g in reps for kind in ("chip", "wire")
+                               if f"{kind}{g}" in children}},
+        "totals": (dict(state["totals"]) if owns0
+                   else {"compute": 0.0, "coll": 0.0, "exposed": 0.0}),
+        "timeline": list(state.get("timeline", [])) if owns0 else [],
+    }
+    for r in state.get("rendezvous", []):
+        arr = [[local[p], int(rd)] for p, rd in r["arrivals"] if p in local]
+        if arr:
+            out["rendezvous"].append({"op_idx": r["op_idx"],
+                                      "arrivals": arr})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# worker process
+# ---------------------------------------------------------------------------
+
+class _ShardRuntime:
+    """Worker-side state: a shard TraceExecutor plus the capture/report
+    bookkeeping that turns it into a dist-gem5 node."""
+
+    def __init__(self, init: Dict[str, Any]):
+        labels: List[int] = list(init["labels"])
+        self.members: List[List[int]] = [list(m) for m in init["members"]]
+        self.labels = labels
+        self.barrier_mode: bool = bool(init["barrier_mode"])
+        self.seq = 0                      # worker-local event sequence
+        self.era = 0                      # barrier index (sync mode)
+        self.outbox: List[Dict[str, Any]] = []
+        self.markers: List[List[int]] = []
+        self.stash: Dict[Tuple[int, int], dict] = {}
+        self.defer_tags: List[Tuple[int, int]] = []
+        self._suppress = False            # restored arrivals: stash only
+
+        m = ClusterModel(init["machine"].get("name", "cluster"))
+        m.load_serialized(init["machine"], strict=False)
+        m.num_pods = len(labels)          # shard-sized machine
+        m.instantiate()
+        self.ex = TraceExecutor(
+            m, algorithm=init["algorithm"],
+            record_timeline=init["record_timeline"],
+            straggler_slowdowns=list(init["slowdowns"]),
+            record_stats=init["record_stats"],
+            timing=init["timing"],
+            pod_labels=labels,
+            dcn_capture=self._capture)
+        if 0 in labels:
+            # run-wide markers fire on the pod carrying global label 0;
+            # the coordinator replays them into the real op_hook
+            self.ex.op_hook = (lambda op, idx, start, end:
+                               self.markers.append([idx, start, end]))
+        # tag deferred-frontier entries as they are appended, so the
+        # coordinator can reassemble the serial engine's chronological
+        # deferred order: (era, seq) under barriers, (tick, seq) in
+        # free-run mode (global pod id disambiguates across workers)
+        orig_issue = self.ex._issue
+
+        def tagged_issue(p: int, idx: int, ready: int) -> None:
+            before = len(self.ex._deferred)
+            orig_issue(p, idx, ready)
+            if len(self.ex._deferred) > before:
+                mark = self.era if self.barrier_mode \
+                    else self.ex._queues[p].now
+                self.defer_tags.append((int(mark), self.seq))
+                self.seq += 1
+
+        self.ex._issue = tagged_issue
+
+        trace = HloTrace.from_json(init["trace"])
+        state = init.get("restore")
+        if state is None:
+            self.ex.begin(trace)
+        else:
+            self._suppress = True
+            try:
+                self.ex.restore(trace, state)
+            finally:
+                self._suppress = False
+
+    # -- dcn capture -----------------------------------------------------
+    def _capture(self, payload: dict) -> None:
+        p = payload["pod"]
+        self.stash[(payload["op_idx"], p)] = payload
+        if self._suppress:
+            return                        # restored arrival: the
+            # coordinator already holds it in its rendezvous map
+        for g in self.members[p]:
+            self.outbox.append({
+                "op": payload["op_idx"], "pod": g,
+                "ready": payload["ready"], "seq": self.seq,
+                "kind": payload.get("kind"),
+                "nbytes": payload.get("nbytes"),
+                "participants": payload.get("participants")})
+        self.seq += 1
+
+    # -- reporting -------------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        ex = self.ex
+        nts = [q.next_tick() for q in ex._queues]
+        nt = min((t for t in nts if t is not None), default=None)
+        rep = {
+            "ok": True,
+            "arrivals": self.outbox,
+            "markers": self.markers,
+            "next_tick": nt,
+            "done": ex.done(),
+            "now": max(q.now for q in ex._queues),
+            "idle": (all(q.empty() for q in ex._queues)
+                     and ex.timing.quiescent(ex)),
+        }
+        self.outbox, self.markers = [], []
+        return rep
+
+    # -- commands --------------------------------------------------------
+    def cmd_advance(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
+        """One quantum barrier: schedule due dcn completion deliveries,
+        run every local queue to the boundary (mirrors
+        ``QuantumSync._advance_to``)."""
+        self.era += 1
+        for c in cmd["completions"]:
+            for p in range(len(self.labels)):
+                w = self.stash.pop((c["op"], p), None)
+                if w is None:
+                    continue
+                w.update(start=c["start"], dur=c["dur"])
+                q = self.ex._queues[p]
+                done = w["done"]
+                at = max(int(c["deliver"]), q.now)
+                q.schedule(
+                    (lambda w=w, q=q, done=done, start=c["start"]:
+                     done(start, q.now, w)),
+                    at, name=w.get("name", "dcn"))
+        t = int(cmd["t"])
+        for q in self.ex._queues:
+            q.run_until(t)
+        return self.report()
+
+    def cmd_advance_free(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
+        """No-dcn mode: advance the shard independently (exact — pods
+        in different workers cannot interact without dcn traffic)."""
+        self.ex.advance(max_tick=cmd["max_tick"])
+        return self.report()
+
+    def cmd_drain(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
+        self.ex._draining = True
+        return {"ok": True}
+
+    def cmd_collect(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
+        """Everything the coordinator needs to reassemble the serial
+        engine's snapshot/result, per representative pod."""
+        ex = self.ex
+        wires = []
+        for w in ex._wires:
+            wires.append([[x, y, d, l.busy_until, l.bytes_carried,
+                           l.transfers]
+                          for (x, y, d), l in sorted(w._net.links.items())])
+        children = ex.sim_root.stats.state_dict()["children"]
+        return {
+            "ok": True,
+            "labels": self.labels,
+            "members": self.members,
+            "op_end": [list(row) for row in ex._op_end],
+            "chip_free": [c.free_tick for c in ex._chips],
+            "wires": wires,
+            "wire_busy": [w.busy_tick() for w in ex._wires],
+            "queues": [q.snapshot() for q in ex._queues],
+            "chip_stats": [children.get(f"chip{g}") for g in self.labels],
+            "wire_stats": [children.get(f"wire{g}") for g in self.labels],
+            "deferred": [list(t) for t in ex._deferred],
+            "defer_tags": [list(t) for t in self.defer_tags],
+            "totals": dict(ex._totals),
+            "timeline": list(ex._timeline),
+        }
+
+
+def _worker_main(conn) -> None:
+    """Worker process entry point (module-level: spawn-safe)."""
+    rt = None
+    try:
+        init = conn.recv()
+        rt = _ShardRuntime(init)
+        conn.send(rt.report())
+        while True:
+            cmd = conn.recv()
+            op = cmd.get("cmd")
+            if op == "exit":
+                break
+            conn.send(getattr(rt, f"cmd_{op}")(cmd))
+    except EOFError:
+        pass
+    except BaseException:
+        try:
+            conn.send({"error": traceback.format_exc()})
+        except Exception:
+            pass
+    finally:
+        try:
+            conn.close()
+        except Exception:
+            pass
+
+
+def _shutdown(conns, procs) -> None:
+    for conn in conns:
+        try:
+            conn.send({"cmd": "exit"})
+        except Exception:
+            pass
+        try:
+            conn.close()
+        except Exception:
+            pass
+    for p in procs:
+        try:
+            p.join(timeout=5)
+            if p.is_alive():
+                p.terminate()
+        except Exception:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# coordinator
+# ---------------------------------------------------------------------------
+
+class ParallelEngine:
+    """Multiprocess drop-in for :class:`TraceExecutor` (``workers=N``).
+
+    Wraps a dormant serial *facade* executor over the full machine: the
+    facade's SimObject tree carries the run's stats/fabric state, and
+    ``snapshot()``/``result()`` are the facade's own — which is what
+    makes parallel results and checkpoints bit-identical to serial ones
+    and worker-count-agnostic.  When sharding cannot be exact (see
+    module docstring) the facade simply runs the workload itself
+    (``serial`` mode) and every call delegates.
+    """
+
+    def __init__(self, machine: ClusterModel, workers: int = 2,
+                 mp_context: Optional[str] = None,
+                 algorithm: str = "torus2d",
+                 record_timeline: bool = False,
+                 straggler_slowdowns: Optional[List[float]] = None,
+                 record_stats: bool = False,
+                 contention: Optional[bool] = None, timing=None):
+        self._facade = TraceExecutor(
+            machine, algorithm=algorithm,
+            record_timeline=record_timeline,
+            straggler_slowdowns=straggler_slowdowns,
+            record_stats=record_stats,
+            contention=contention, timing=timing)
+        self.workers = max(1, int(workers))
+        if mp_context is None:
+            # fork is cheap (~ms/worker) and the default where available;
+            # spawn is fully supported (init payloads are plain data and
+            # the worker entry point is module-level)
+            mp_context = ("fork" if "fork" in mp.get_all_start_methods()
+                          else "spawn")
+        self.mp_context = mp_context
+        self._mode: Optional[str] = None   # "serial" | "sync" | "free"
+        self._procs: List[Any] = []
+        self._conns: List[Any] = []
+        self._winfo: List[Dict[str, Any]] = []
+        self._pending: List[Tuple[int, Dict[str, Any]]] = []
+        self._t_now = 0
+        self._draining = False
+        self._collected: Optional[List[Dict[str, Any]]] = None
+        self._finalizer: Optional[weakref.finalize] = None
+
+    # -- facade delegation ----------------------------------------------
+    def __getattr__(self, name: str):
+        facade = self.__dict__.get("_facade")
+        if facade is None or name.startswith("__"):
+            raise AttributeError(name)
+        return getattr(facade, name)
+
+    @property
+    def op_hook(self):
+        return self._facade.op_hook
+
+    @op_hook.setter
+    def op_hook(self, fn) -> None:
+        self._facade.op_hook = fn
+
+    @property
+    def injection_hook(self):
+        return self._facade.injection_hook
+
+    @injection_hook.setter
+    def injection_hook(self, fn) -> None:
+        self._facade.injection_hook = fn
+
+    @property
+    def now(self) -> int:
+        if self._mode in (None, "serial"):
+            return self._facade.now
+        return max([self._t_now] + [w["now"] for w in self._winfo])
+
+    # -- mode selection ---------------------------------------------------
+    def _parallel_plan(self, trace: HloTrace,
+                       state: Optional[Dict[str, Any]]) -> Optional[str]:
+        """Return "sync"/"free" when sharding is exact, None for the
+        serial fallback."""
+        f = self._facade
+        n = f.machine.num_pods
+        if self.workers <= 1 or n < 2:
+            return None
+        if f.algorithm == "hierarchical":
+            return None                   # intra-pod cost reads num_pods
+        if state is not None and (state.get("injected")
+                                  or state.get("inject_floor")):
+            return None                   # dynamic workload checkpoint
+        needs_dcn = any(f._routes_dcn(op) for op in trace.ops)
+        if not needs_dcn:
+            return "free"
+        if f.timing.parallel_dcn_ok and f.machine.quantum_ns > 0:
+            return "sync"
+        return None                       # exact-tick dcn delivery
+
+    # -- lifecycle: begin / restore ---------------------------------------
+    def begin(self, trace: HloTrace) -> "ParallelEngine":
+        mode = self._parallel_plan(trace, None)
+        if mode is None:
+            self._mode = "serial"
+            self._facade.begin(trace)
+            return self
+        self._mode = mode
+        self._facade._setup(trace)        # dormant: never issues ops
+        self._spawn(trace, None)
+        return self
+
+    def restore(self, trace: HloTrace,
+                state: Dict[str, Any]) -> "ParallelEngine":
+        mode = self._parallel_plan(trace, state)
+        if mode is None:
+            self._mode = "serial"
+            self._facade.restore(trace, state)
+            return self
+        f = self._facade
+        if f.machine.num_pods != len(state["op_end"]):
+            raise ValueError(
+                f"cannot restore a {len(state['op_end'])}-pod snapshot "
+                f"onto a {f.machine.num_pods}-pod machine "
+                "(re-parameterize speeds, not the pod count)")
+        self._mode = mode
+        f._setup(trace)
+        # the coordinator owns the shared fabric: uplink occupancy, dcn
+        # stats and partial rendezvous.  Per-pod (chip/wire) stat
+        # subtrees are NOT loaded here — the workers continue them from
+        # the sliced restore state and merge them back at collect time,
+        # and a merge into untouched stats is what stays bit-exact
+        for i, (busy, nbytes, transfers) in enumerate(state["dcn_uplinks"]):
+            if i < len(f._dcn.uplinks):
+                link = f._dcn.uplinks[i]
+                link.busy_until = busy
+                link.bytes_carried = nbytes
+                link.transfers = int(transfers)
+        sd = state["stats"]
+        f.sim_root.stats.load_state_dict(
+            {"stats": sd.get("stats", {}),
+             "children": {k: v for k, v in sd.get("children", {}).items()
+                          if not (k.startswith("chip")
+                                  or k.startswith("wire"))}})
+        for r in state.get("rendezvous", []):
+            arr = r["arrivals"]
+            f._dcn._rendezvous[int(r["op_idx"])] = {
+                "arrived": len(arr),
+                "first": min(rd for _, rd in arr),
+                "last": max(rd for _, rd in arr),
+                "waiters": [{"pod": int(p), "ready": int(rd)}
+                            for p, rd in arr],
+            }
+        self._spawn(trace, state)
+        return self
+
+    def _spawn(self, trace: HloTrace, state: Optional[Dict[str, Any]]
+               ) -> None:
+        f = self._facade
+        n = f.machine.num_pods
+        if state is None:
+            keys: Dict[int, Any] = {g: repr(f.slow[g]) for g in range(n)}
+        else:
+            keys = {g: (repr(f.slow[g]), _pod_state_key(state, g))
+                    for g in range(n)}
+        machine_dict = f.machine.serialize()
+        trace_json = trace.to_json()
+        ctx = mp.get_context(self.mp_context)
+        shards = plan_shards(n, self.workers)
+        for shard in shards:
+            reps, members = fold_pods(shard, keys)
+            init = {
+                "machine": machine_dict,
+                "trace": trace_json,
+                "labels": reps,
+                "members": members,
+                "slowdowns": [f.slow[g] for g in reps],
+                "algorithm": f.algorithm,
+                "timing": f.timing.name,
+                "record_stats": f.record_stats,
+                "record_timeline": f.record_timeline,
+                "barrier_mode": self._mode == "sync",
+            }
+            if state is not None:
+                init["restore"] = _slice_state(state, reps,
+                                               owns0=0 in shard)
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(target=_worker_main, args=(child,),
+                               daemon=True)
+            proc.start()
+            child.close()
+            parent.send(init)
+            self._procs.append(proc)
+            self._conns.append(parent)
+        self._finalizer = weakref.finalize(self, _shutdown,
+                                           self._conns, self._procs)
+        for i, conn in enumerate(self._conns):
+            self._winfo.append(self._recv(conn, i))
+
+    def _recv(self, conn, i: int) -> Dict[str, Any]:
+        try:
+            rep = conn.recv()
+        except EOFError:
+            raise RuntimeError(f"parallel worker {i} died "
+                               "(pipe closed mid-run)") from None
+        if "error" in rep:
+            raise RuntimeError(
+                f"parallel worker {i} failed:\n{rep['error']}")
+        return rep
+
+    def _broadcast(self, cmd: Dict[str, Any]) -> List[Dict[str, Any]]:
+        for conn in self._conns:
+            conn.send(cmd)
+        return [self._recv(conn, i) for i, conn in enumerate(self._conns)]
+
+    # -- advance ----------------------------------------------------------
+    def _merge_reply(self, i: int, rep: Dict[str, Any],
+                     rows: List[Dict[str, Any]]) -> None:
+        w = self._winfo[i]
+        w.update(next_tick=rep["next_tick"], done=rep["done"],
+                 now=rep["now"], idle=rep["idle"])
+        rows.extend(rep["arrivals"])
+        if rep["markers"] and self._facade.op_hook is not None:
+            ops = self._facade._trace.ops
+            for idx, start, end in rep["markers"]:
+                self._facade.op_hook(ops[idx], idx, start, end)
+
+    def _after_barrier(self, replies: List[Dict[str, Any]]) -> None:
+        rows: List[Dict[str, Any]] = []
+        for i, rep in enumerate(replies):
+            self._merge_reply(i, rep, rows)
+        if rows:
+            self._process_arrivals(rows)
+
+    def _process_arrivals(self, rows: List[Dict[str, Any]]) -> None:
+        """Replay ``DcnSim._on_arrive`` on the facade's fabric, in the
+        serial engine's canonical order: within a barrier the serial
+        ``_advance_to`` runs queue 0 fully, then queue 1, ... — i.e.
+        arrivals ordered by (global pod, per-pod event sequence)."""
+        f = self._facade
+        dcn = f._dcn
+        quantum = f.machine.quantum_ns
+        for a in sorted(rows, key=lambda a: (a["pod"], a["seq"])):
+            r = dcn._rendezvous.setdefault(
+                a["op"], {"arrived": 0, "first": a["ready"], "last": 0,
+                          "waiters": []})
+            r["arrived"] += 1
+            r["first"] = min(r["first"], a["ready"])
+            r["last"] = max(r["last"], a["ready"])
+            r["waiters"].append({"pod": a["pod"], "ready": a["ready"]})
+            r["kind"] = a["kind"]
+            r["nbytes"] = a["nbytes"]
+            r["participants"] = a["participants"]
+            if r["arrived"] < f.machine.num_pods:
+                continue
+            del dcn._rendezvous[a["op"]]
+            dur = to_ticks(f.dcn_alg.time_s(r["kind"], r["nbytes"],
+                                            r["participants"], f.machine))
+            if dcn.contention:
+                start = max([r["last"]]
+                            + [int(l.busy_until) for l in dcn.uplinks])
+            else:
+                start = r["last"]
+            end = start + dur
+            for l in dcn.uplinks:
+                l.busy_until = max(l.busy_until, end)
+                l.bytes_carried += r["nbytes"] / len(dcn.uplinks)
+                l.transfers += 1
+            dcn.st_colls.inc()
+            dcn.st_bytes.inc(r["nbytes"])
+            dcn.st_busy.inc(dur / TICKS_PER_S)
+            dcn.st_skew.sample((r["last"] - r["first"]) / TICKS_PER_S)
+            deliver = quantum_delivery(r["last"], end - r["last"], quantum)
+            self._pending.append((deliver, {"op": a["op"], "start": start,
+                                            "dur": dur,
+                                            "deliver": deliver}))
+
+    def _barrier(self, t: int) -> None:
+        due = [c for d, c in self._pending if d <= t]
+        self._pending = [(d, c) for d, c in self._pending if d > t]
+        replies = self._broadcast({"cmd": "advance", "t": t,
+                                   "completions": due})
+        self._t_now = t
+        self._after_barrier(replies)
+
+    def _advance_sync(self, max_tick: Optional[int],
+                      stop_check: Optional[Callable[[], bool]]) -> None:
+        """Coordinator-as-clock: the exact loop of
+        ``QuantumSync.run_until_drained``, with worker-reported next
+        ticks standing in for ``q.next_tick()``."""
+        quantum = self._facade.machine.quantum_ns
+        t = (self._t_now // quantum) * quantum
+        while True:
+            if stop_check is not None and stop_check():
+                return
+            upcoming = [w["next_tick"] for w in self._winfo
+                        if w["next_tick"] is not None]
+            if self._pending:
+                upcoming.append(min(d for d, _ in self._pending))
+            if not upcoming:
+                return
+            target = min(upcoming)
+            t = max(quantum_boundary(target, quantum), t + quantum)
+            if max_tick is not None and t > max_tick:
+                if target <= max_tick:
+                    self._barrier(max_tick)
+                return
+            self._barrier(t)
+
+    def _advance_free(self, max_tick: Optional[int],
+                      stop_check: Optional[Callable[[], bool]]) -> None:
+        if stop_check is not None and stop_check():
+            return
+        replies = self._broadcast({"cmd": "advance_free",
+                                   "max_tick": max_tick})
+        self._after_barrier(replies)
+
+    def advance(self, max_tick: Optional[int] = None,
+                stop_check: Optional[Callable[[], bool]] = None) -> bool:
+        if self._mode is None:
+            raise RuntimeError("advance() before begin()/restore()")
+        if self._mode == "serial":
+            return self._facade.advance(max_tick, stop_check)
+        if self._collected is not None:
+            if self.done() or self._draining:
+                return self.done()
+            raise RuntimeError("cannot advance a collected parallel run "
+                               "(restore from its checkpoint instead)")
+        if self._mode == "sync":
+            self._advance_sync(max_tick, stop_check)
+        else:
+            self._advance_free(max_tick, stop_check)
+        return self.done()
+
+    def done(self) -> bool:
+        if self._mode in (None, "serial"):
+            return self._facade.done()
+        return all(w["done"] for w in self._winfo)
+
+    # -- drain / snapshot / result ----------------------------------------
+    def drain(self) -> bool:
+        if self._mode == "serial":
+            return self._facade.drain()
+        self._draining = True
+        self._facade._draining = True
+        if self._collected is None:
+            self._broadcast({"cmd": "drain"})
+            return self.advance()
+        return self.done()
+
+    def drained(self) -> bool:
+        if self._mode == "serial":
+            return self._facade.drained()
+        return (self._mode is not None and self._draining
+                and not self._pending
+                and all(w.get("idle") for w in self._winfo))
+
+    def snapshot(self) -> Dict[str, Any]:
+        if self._mode == "serial":
+            return self._facade.snapshot()
+        if not self.drained():
+            raise RuntimeError("snapshot() requires drain() first "
+                               "(gem5: drain-then-serialize)")
+        self._collect()
+        return self._facade.snapshot()
+
+    def result(self) -> ExecResult:
+        if self._mode == "serial":
+            return self._facade.result()
+        self._collect()
+        return self._facade.result()
+
+    def _collect(self) -> None:
+        """Pull worker shard state into the facade executor (expanding
+        folded clones), after which the facade's own ``snapshot()`` /
+        ``result()`` produce serial-format, serial-identical output.
+        Workers are released afterwards — a collected engine answers
+        any number of snapshot/result calls but cannot advance."""
+        if self._collected is not None:
+            return
+        replies = self._broadcast({"cmd": "collect"})
+        f = self._facade
+        deferred: List[Tuple[Tuple[int, int], int, int, int]] = []
+        for rep in replies:
+            members = rep["members"]
+            for i in range(len(rep["labels"])):
+                for g in members[i]:
+                    f._op_end[g] = list(rep["op_end"][i])
+                    f._chips[g]._free = int(rep["chip_free"][i])
+                    net = f._wires[g]._net
+                    for x, y, d, busy, nbytes, transfers in rep["wires"][i]:
+                        link = net._link(int(x), int(y), d)
+                        link.busy_until = busy
+                        link.bytes_carried = nbytes
+                        link.transfers = int(transfers)
+                    f._wires[g]._busy_hwm = int(rep["wire_busy"][i])
+                    q = f._queues[g]
+                    q.events_fired = int(rep["queues"][i]["events_fired"])
+                    q.run_until(int(rep["queues"][i]["now"]))
+                    # per-pod stats subtrees are disjoint across pods, so
+                    # this merge is exact (merge into untouched == adopt)
+                    for kind, sds in (("chip", rep["chip_stats"]),
+                                      ("wire", rep["wire_stats"])):
+                        if sds[i] is not None:
+                            f.sim_root.stats.merge_state_dict(
+                                {"children": {f"{kind}{g}": sds[i]}})
+            for (p, idx, ready), tag in zip(rep["deferred"],
+                                            rep["defer_tags"]):
+                for g in members[p]:
+                    deferred.append(((int(tag[0]), int(tag[1])),
+                                     g, int(idx), int(ready)))
+            if any(0 in mm for mm in members):
+                f._totals = {k: float(v) for k, v in rep["totals"].items()}
+                f._timeline = list(rep["timeline"])
+        # serial chronological order: (barrier era | tick, pod, seq)
+        deferred.sort(key=lambda e: (e[0][0], e[1], e[0][1]))
+        f._deferred = [(g, idx, ready) for _, g, idx, ready in deferred]
+        f._ncomplete = sum(1 for row in f._op_end for e in row if e >= 0)
+        self._collected = replies
+        self.close()
+
+    # -- teardown ----------------------------------------------------------
+    def close(self) -> None:
+        """Shut worker processes down (idempotent; the facade and any
+        collected state stay usable)."""
+        conns, procs = self._conns, self._procs
+        self._conns, self._procs = [], []
+        if self._finalizer is not None:
+            self._finalizer.detach()
+            self._finalizer = None
+        if conns or procs:
+            _shutdown(conns, procs)
+
+    # -- one-shot ----------------------------------------------------------
+    def execute(self, trace: HloTrace) -> ExecResult:
+        self.begin(trace)
+        self.advance()
+        res = self.result()
+        self.close()
+        return res
+
+    # -- dynamic workloads -------------------------------------------------
+    def inject_op(self, op, ready: int, pod: int = 0) -> int:
+        if self._mode == "serial":
+            return self._facade.inject_op(op, ready, pod)
+        raise RuntimeError(
+            "inject_op() on a sharded parallel run: dynamic workloads "
+            "run serially (repro.sim.Simulator arranges this)")

@@ -258,12 +258,17 @@ class DcnSim(SimObject):
     def __init__(self, name: str, machine: ClusterModel,
                  algorithm: CollectiveAlgorithm,
                  queues: List[EventQueue], sync: Optional[QuantumSync],
+                 capture: Optional[Callable[[dict], None]] = None,
                  **params):
         super().__init__(name, **params)
         self._machine = machine
         self._alg = algorithm
         self._queues = queues
         self._sync = sync
+        # parallel-shard mode: arrivals are forwarded to the capture
+        # callback (and on to the coordinator process, which owns the
+        # one true fabric) instead of rendezvousing locally
+        self._capture = capture
         self.uplinks = [LinkState() for _ in range(len(queues))]
         self._rendezvous: Dict[int, dict] = {}
         self.ports = PortSet(self)
@@ -279,6 +284,9 @@ class DcnSim(SimObject):
 
     # ------------------------------------------------------------------
     def _on_arrive(self, payload: dict) -> dict:
+        if self._capture is not None:
+            self._capture(payload)
+            return payload
         key = payload["op_idx"]
         r = self._rendezvous.setdefault(
             key, {"arrived": 0, "first": payload["ready"], "last": 0,

@@ -57,6 +57,13 @@ class TimingModel:
     #: True when link-level contention and the quantum error model are
     #: simulated (the ``Detailed`` end of the fidelity ladder)
     detailed = True
+    #: True when cross-pod (dcn) traffic under this model is exchanged
+    #: only at quantum boundaries — the property that lets the
+    #: multiprocess engine (repro.core.desim.parallel) shard pods across
+    #: workers bit-exactly.  Models that deliver dcn completions at
+    #: exact ticks (atomic) need the global tick-ordered merge and fall
+    #: back to the serial path when the trace has dcn ops.
+    parallel_dcn_ok = False
 
     # -- lifecycle -------------------------------------------------------
     def reset(self, ex) -> None:
@@ -103,6 +110,7 @@ class DetailedTiming(TimingModel):
 
     name = "detailed"
     detailed = True
+    parallel_dcn_ok = True
 
     def issue(self, ex, p, idx, ready):
         op = ex._trace.ops[idx]
@@ -159,6 +167,7 @@ class AtomicTiming(TimingModel):
 
     name = "atomic"
     detailed = False
+    parallel_dcn_ok = False   # dcn completes at exact ticks, not quanta
 
     def reset(self, ex):
         self._heap: List[Tuple[int, int, str, tuple]] = []

@@ -37,6 +37,24 @@ PRI_DEFAULT = 0
 PRI_PROGRESS = 50
 
 
+def quantum_boundary(tick: int, quantum: int) -> int:
+    """First quantum boundary >= ``tick`` (ceiling to a multiple).
+
+    Shared by :class:`QuantumSync` and the multiprocess coordinator in
+    :mod:`repro.core.desim.parallel`, which must agree bit-for-bit on
+    barrier placement for parallel runs to be tick-exact."""
+    return -(-int(tick) // quantum) * quantum
+
+
+def quantum_delivery(src_now: int, latency: int, quantum: int) -> int:
+    """Delivery tick for a cross-queue message sent at ``src_now``:
+    the first quantum boundary >= ``src_now + max(latency, quantum)``.
+    The one-quantum floor is what makes quantum sync correct — within a
+    quantum no queue can observe another queue's events (dist-gem5
+    §2.17), so nothing may be delivered sooner."""
+    return quantum_boundary(src_now + max(int(latency), quantum), quantum)
+
+
 class SimExit(Exception):
     """Raised by an event to stop the simulation (gem5's exit event)."""
 
@@ -236,9 +254,7 @@ class QuantumSync:
              latency: int) -> None:
         """Cross-queue message: delivered at the first quantum boundary
         >= src_now + latency (models dist-gem5 packet forwarding)."""
-        deliver = src_now + max(int(latency), self.quantum)
-        # round up to the next quantum boundary
-        deliver = ((deliver + self.quantum - 1) // self.quantum) * self.quantum
+        deliver = quantum_delivery(src_now, latency, self.quantum)
         self._pending.append((deliver, dst, callback))
 
     def _advance_to(self, t: int) -> None:
@@ -293,8 +309,7 @@ class QuantumSync:
                 return t
             target = min(upcoming)
             # next boundary that covers ``target`` (and is ahead of us)
-            nxt = -(-target // self.quantum) * self.quantum
-            t = max(nxt, t + self.quantum)
+            t = max(quantum_boundary(target, self.quantum), t + self.quantum)
             if max_tick is not None and t > max_tick:
                 # clamp like run(): fire everything due by max_tick,
                 # leave later events unfired

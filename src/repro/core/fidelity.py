@@ -157,16 +157,21 @@ class DesimBackend(Backend):
     statistics tree (per-chip/per-wire/fabric counters) into
     ``report.detail["stats"]`` (flat dict) and
     ``report.detail["stats_text"]`` (gem5 stats.txt-style dump).
+
+    ``workers=N`` (N>1) shards the machine's pods across N worker
+    processes (dist-gem5 multiprocess simulation, ``repro.core.desim.
+    parallel``) — same numbers, less wall clock on multipod boards.
     """
 
     kind = "desim"
 
     def __init__(self, machine=None, record_stats: bool = False,
-                 board=None):
+                 board=None, workers: int = 1):
         # machine: repro.core.desim.machine.ClusterModel (built lazily)
         self.machine = machine
         self.board = board
         self.record_stats = record_stats
+        self.workers = int(workers or 1)
 
     def run(self, prog: StepProgram,
             dryrun_report: Optional[StepReport] = None) -> StepReport:
@@ -183,7 +188,8 @@ class DesimBackend(Backend):
             dryrun_report.detail["hlo"], name=prog.name,
             total_flops=dryrun_report.flops or 0.0,
             total_bytes=dryrun_report.bytes_accessed or 0.0)
-        sim = Simulator(board, trace, record_stats=self.record_stats)
+        sim = Simulator(board, trace, record_stats=self.record_stats,
+                        workers=self.workers)
         result = sim.run_to_completion()
         dt = time.perf_counter() - t0
         rep = StepReport(self.kind, prog.name, wall_s=dt,

@@ -49,6 +49,20 @@ class Stat:
     def load_state_dict(self, d: Dict[str, Any]) -> None:
         pass
 
+    # -- merging (repro.core.desim.parallel, sweep shards) -------------
+    def merge(self, other: "Stat") -> None:
+        """Fold ``other``'s accumulators into this stat, as if both
+        sample streams had been fed to one stat.  Counts, sums, bins
+        and extrema combine exactly; a ``Distribution``'s mean/m2 use
+        the parallel Welford (Chan) update, which is exact in count and
+        equal up to float rounding in mean/variance.  Merging into an
+        *empty* stat adopts ``other``'s state verbatim (bit-exact) —
+        the property the parallel engine's disjoint per-pod subtrees
+        rely on."""
+        if type(other) is not type(self):
+            raise TypeError(f"cannot merge {type(other).__name__} into "
+                            f"{type(self).__name__} stat {self.name!r}")
+
 
 class Scalar(Stat):
     kind = "scalar"
@@ -74,6 +88,10 @@ class Scalar(Stat):
 
     def load_state_dict(self, d: Dict[str, Any]) -> None:
         self._v = float(d["v"])
+
+    def merge(self, other: "Stat") -> None:
+        super().merge(other)
+        self._v += other._v
 
 
 class Vector(Stat):
@@ -108,6 +126,13 @@ class Vector(Stat):
             raise ValueError(f"vector {self.name}: size mismatch "
                              f"{len(d['v'])} != {len(self._v)}")
         self._v = [float(x) for x in d["v"]]
+
+    def merge(self, other: "Stat") -> None:
+        super().merge(other)
+        if len(other._v) != len(self._v):
+            raise ValueError(f"vector {self.name}: size mismatch "
+                             f"{len(other._v)} != {len(self._v)}")
+        self._v = [a + b for a, b in zip(self._v, other._v)]
 
 
 class Distribution(Stat):
@@ -169,6 +194,28 @@ class Distribution(Stat):
         self._m2 = float(d["m2"])
         self._min = float("inf") if d["min"] is None else float(d["min"])
         self._max = float("-inf") if d["max"] is None else float(d["max"])
+
+    def merge(self, other: "Stat") -> None:
+        super().merge(other)
+        if other._count == 0:
+            return
+        if self._count == 0:
+            # adopt verbatim: merging into an empty stat is bit-exact
+            self._count = other._count
+            self._mean = other._mean
+            self._m2 = other._m2
+            self._min = other._min
+            self._max = other._max
+            return
+        # Chan et al. parallel Welford update
+        na, nb = self._count, other._count
+        delta = other._mean - self._mean
+        n = na + nb
+        self._mean += delta * nb / n
+        self._m2 += other._m2 + delta * delta * na * nb / n
+        self._count = n
+        self._min = min(self._min, other._min)
+        self._max = max(self._max, other._max)
 
 
 class Percentiles(Stat):
@@ -284,6 +331,30 @@ class Percentiles(Stat):
         self._min = float("inf") if d["min"] is None else float(d["min"])
         self._max = float("-inf") if d["max"] is None else float(d["max"])
 
+    def merge(self, other: "Stat") -> None:
+        super().merge(other)
+        if other.rel_err != self.rel_err:
+            raise ValueError(
+                f"percentiles {self.name}: rel_err mismatch "
+                f"{other.rel_err} != {self.rel_err} (bins not comparable)")
+        if other._count == 0:
+            return
+        if self._count == 0:
+            self._bins = dict(other._bins)
+            self._zero = other._zero
+            self._count = other._count
+            self._sum = other._sum
+            self._min = other._min
+            self._max = other._max
+            return
+        for k, n in other._bins.items():
+            self._bins[k] = self._bins.get(k, 0) + n
+        self._zero += other._zero
+        self._count += other._count
+        self._sum += other._sum
+        self._min = min(self._min, other._min)
+        self._max = max(self._max, other._max)
+
 
 class Formula(Stat):
     """Lazily-evaluated derived stat (gem5 ``Formula``)."""
@@ -303,6 +374,18 @@ class Formula(Stat):
 
     def reset(self) -> None:
         pass
+
+
+def _rehydrate(like: Stat, sd: Dict[str, Any]) -> Stat:
+    """Build a scratch stat of ``like``'s kind holding ``sd``'s state."""
+    if isinstance(like, Vector):
+        tmp: Stat = Vector(like.name, len(sd["v"]))
+    elif isinstance(like, Percentiles):
+        tmp = Percentiles(like.name, rel_err=float(sd["rel_err"]))
+    else:
+        tmp = type(like)(like.name)
+    tmp.load_state_dict(sd)
+    return tmp
 
 
 class StatGroup:
@@ -421,6 +504,65 @@ class StatGroup:
                 by_name[k].load_state_dict(cd, strict=strict)
             elif strict:
                 raise KeyError(f"no child group {k!r} under {self.name!r}")
+
+    # -- merging (repro.core.desim.parallel, sweep shards) --------------
+    def merge(self, other: "StatGroup", strict: bool = False) -> "StatGroup":
+        """Fold ``other``'s tree into this one, matching stats and child
+        groups by name and calling :meth:`Stat.merge` on each pair.  The
+        result is as if both trees had accumulated one combined sample
+        stream: counts/sums/bins combine exactly, Welford mean/m2 via the
+        parallel (Chan) update.  Disjoint subtrees — the parallel
+        engine's per-pod shards — merge bit-exactly, because merging into
+        an untouched (zero/empty) stat adopts the source verbatim.
+        Names present on only one side are skipped unless ``strict``.
+        ``Formula`` stats carry no accumulator state and are ignored.
+        Returns ``self`` so merges chain across sweep shards."""
+        for k, st in other._stats.items():
+            mine = self._stats.get(k)
+            if mine is None:
+                if strict:
+                    raise KeyError(f"no stat {k!r} in group {self.name!r}")
+                continue
+            if isinstance(st, Formula):
+                continue
+            mine.merge(st)
+        by_name = {c.name: c for c in self._children}
+        for c in other._children:
+            mine = by_name.get(c.name)
+            if mine is None:
+                if strict:
+                    raise KeyError(
+                        f"no child group {c.name!r} under {self.name!r}")
+                continue
+            mine.merge(c, strict=strict)
+        return self
+
+    def merge_state_dict(self, d: Dict[str, Any],
+                         strict: bool = False) -> "StatGroup":
+        """:meth:`merge`, but the right-hand side is a ``state_dict``
+        (the wire format workers ship across process pipes) instead of a
+        live tree.  Each entry is rehydrated into a scratch stat of the
+        matching kind and merged, so the exactness guarantees of
+        :meth:`Stat.merge` apply unchanged."""
+        for k, sd in d.get("stats", {}).items():
+            st = self._stats.get(k)
+            if st is None:
+                if strict:
+                    raise KeyError(f"no stat {k!r} in group {self.name!r}")
+                continue
+            if isinstance(st, Formula):
+                continue
+            st.merge(_rehydrate(st, sd))
+        by_name = {c.name: c for c in self._children}
+        for k, cd in d.get("children", {}).items():
+            mine = by_name.get(k)
+            if mine is None:
+                if strict:
+                    raise KeyError(
+                        f"no child group {k!r} under {self.name!r}")
+                continue
+            mine.merge_state_dict(cd, strict=strict)
+        return self
 
 
 class TimeSeries:

@@ -14,6 +14,8 @@ Simulation"):
 from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
                               v5e_multipod, v5e_pod, v5e_serving,
                               v5e_straggler, v5e_unreliable)
+from repro.sim.parallel import (ParallelEngine, merge_stat_trees,
+                                parallel_supported, run_parallel)
 from repro.sim.sampling import (SampledResult, SampledSimulation,
                                 SamplePlan, atomic_step_time_s, sampled_run)
 from repro.sim.serialize import (CHECKPOINT_VERSION, WORKLOAD_KEY,
@@ -42,4 +44,6 @@ __all__ = [
     "CheckpointError",
     "checkpoint_executor", "save_checkpoint", "load_checkpoint",
     "restore_executor", "machine_from_dict",
+    "ParallelEngine", "run_parallel", "parallel_supported",
+    "merge_stat_trees",
 ]

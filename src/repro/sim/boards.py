@@ -60,7 +60,12 @@ class Board:
 
     def executor(self, **kw) -> TraceExecutor:
         """A TraceExecutor wired for this board (kw: record_stats,
-        record_timeline, timing, ... pass through)."""
+        record_timeline, timing, ... pass through).  ``workers=N`` (N>1)
+        returns the multiprocess :class:`~repro.core.desim.parallel.
+        ParallelEngine` instead — a drop-in executor that shards the
+        board's pods across N worker processes with dist-gem5
+        quantum-barrier sync (bit-identical results; ``mp_context``
+        picks the multiprocessing start method)."""
         self.instantiate()
         kw.setdefault("algorithm", self.algorithm)
         kw.setdefault("straggler_slowdowns", self.straggler_slowdowns)
@@ -71,6 +76,12 @@ class Board:
         # must not be overridden by an atomic board default)
         if kw.get("timing") is None and kw.get("contention") is None:
             kw["timing"] = self.timing
+        workers = int(kw.pop("workers", None) or 1)
+        mp_context = kw.pop("mp_context", None)
+        if workers > 1:
+            from repro.core.desim.parallel import ParallelEngine
+            return ParallelEngine(self.machine, workers=workers,
+                                  mp_context=mp_context, **kw)
         return TraceExecutor(self.machine, **kw)
 
 

@@ -145,7 +145,10 @@ def restore_executor(ckpt: Dict[str, Any],
     ``overrides``: TraceExecutor kwargs overriding the checkpointed
     config (e.g. ``record_stats=True``, or ``timing="detailed"`` — the
     gem5 ``switch_cpus`` move: a checkpoint taken under one timing
-    model restores under another).
+    model restores under another).  ``workers=N`` (N>1) restores into
+    the multiprocess :class:`~repro.core.desim.parallel.ParallelEngine`
+    — checkpoints are worker-count-agnostic, so a snapshot taken under
+    any worker count restores under any other.
     """
     _check_header(ckpt)
     trace = trace_from_checkpoint(ckpt)
@@ -155,5 +158,12 @@ def restore_executor(ckpt: Dict[str, Any],
     # a None override must not shadow the checkpointed timing model
     cfg.update({k: v for k, v in overrides.items()
                 if not (k in ("timing", "contention") and v is None)})
+    workers = int(cfg.pop("workers", None) or 1)
+    mp_context = cfg.pop("mp_context", None)
+    if workers > 1:
+        from repro.core.desim.parallel import ParallelEngine
+        eng = ParallelEngine(machine, workers=workers,
+                             mp_context=mp_context, **cfg)
+        return eng.restore(trace, ckpt["state"])
     ex = TraceExecutor(machine, **cfg)
     return ex.restore(trace, ckpt["state"])

@@ -163,13 +163,21 @@ class Simulator:
                    "atomic"; default: the board's).  Switch mid-run
                    with :meth:`switch_timing` — the gem5 ``switch_cpus``
                    move.
+    ``workers``  : shard the board's pods across N worker processes
+                   (dist-gem5 multiprocess simulation, §2.17 — see
+                   ``repro.core.desim.parallel``).  Results and
+                   checkpoints are bit-identical to ``workers=1``.
+                   Dynamic workloads co-simulate in-process (their
+                   injected ops couple the run to host code every
+                   event), so ``workers`` is coerced to 1 for them.
     """
 
     def __init__(self, board, workload, *,
                  checkpoint_dir: Optional[str] = None,
                  record_stats: bool = True, record_timeline: bool = False,
                  contention: Optional[bool] = None,
-                 timing: Optional[str] = None):
+                 timing: Optional[str] = None,
+                 workers: int = 1, mp_context: Optional[str] = None):
         if isinstance(board, ClusterModel):
             board = Board(machine=board)
         self.board = board.instantiate()     # Simulator owns instantiate()
@@ -182,9 +190,13 @@ class Simulator:
             self._dyn = None
             self._trace = (workload if isinstance(workload, HloTrace)
                            else workload.trace())
+        if self._dyn is not None:
+            workers = 1        # co-simulation is inherently in-process
         self._ex_cfg = dict(record_stats=record_stats,
                             record_timeline=record_timeline,
-                            contention=contention, timing=timing)
+                            contention=contention, timing=timing,
+                            workers=int(workers or 1),
+                            mp_context=mp_context)
         self._ex = board.executor(**self._ex_cfg)
         # pin the resolved model: checkpoints/switches restore under it
         self._ex_cfg["timing"] = self._ex.timing.name
@@ -206,7 +218,9 @@ class Simulator:
     @classmethod
     def from_checkpoint(cls, source, board: Optional[Board] = None, *,
                         workload=None, timing: Optional[str] = None,
-                        checkpoint_dir: Optional[str] = None) -> "Simulator":
+                        checkpoint_dir: Optional[str] = None,
+                        workers: int = 1,
+                        mp_context: Optional[str] = None) -> "Simulator":
         """Resume a serialized simulation, optionally onto a
         re-parameterized ``board`` (the checkpoint-once, sweep-hardware
         workflow).  ``source`` is a path or a checkpoint dict.
@@ -258,7 +272,8 @@ class Simulator:
                           else cfg.get("timing")),
                   contention=(None if timing is not None
                               or cfg.get("timing") is not None
-                              else cfg.get("contention")))
+                              else cfg.get("contention")),
+                  workers=workers, mp_context=mp_context)
         overrides = dict(sim._ex_cfg)
         if explicit_board:
             # an explicitly-passed board wins wholesale: it bundles the

@@ -1,0 +1,99 @@
+"""Subprocess probe for tests/test_parallel_determinism.py.
+
+Runs the same simulations under a requested worker count and prints a
+JSON digest of everything that must be identical between serial and
+multiprocess execution: final ticks, the full stats-tree accumulator
+state, drained snapshots, and dynamic-workload decision logs.  Executed
+in a FRESH interpreter per invocation so Python hash randomization
+differs between runs — any iteration order leaking from an unordered
+container (in the engine, the coordinator, or the pipe protocol) shows
+up as a digest mismatch.
+
+    python tests/_parallel_probe.py <workers>
+"""
+
+import json
+import sys
+
+
+def static_digest(workers: int):
+    """Static trace replay: straggler board, mid-run drained snapshot,
+    then run to completion — the paths the parallel engine reorders."""
+    from repro.core.desim.trace import analytic_trace
+    from repro.sim import run_parallel, v5e_straggler
+
+    def trace():
+        return analytic_trace(
+            "t", layers=6, layer_flops=2e12, layer_bytes=1e10,
+            layer_collectives=[{"kind": "all-reduce", "bytes": 2e8}],
+            tail_collectives=[{"kind": "all-reduce", "bytes": 5e8,
+                               "scope": "dcn"}])
+
+    board = v5e_straggler(num_pods=4, slowdown=2.0, nx=4, ny=4)
+    res = run_parallel(board, trace(), workers=workers, record_stats=True)
+
+    eng = board.executor(workers=workers, record_stats=True)
+    eng.begin(trace())
+    eng.advance(max_tick=125_000_000)   # mid-rendezvous (see engine tests)
+    eng.drain()
+    snap = eng.snapshot()
+    close = getattr(eng, "close", None)
+    if close:
+        close()
+    return {
+        "makespan_s": res.makespan_s,
+        "per_chip_busy_s": res.per_chip_busy_s,
+        "stats": res.stats,
+        "snapshot": json.dumps(snap, sort_keys=True),
+    }
+
+
+def serve_digest(workers: int):
+    """ServeSim decision log.  Dynamic workloads are co-simulated
+    in-process (Simulator coerces workers -> 1); the digest pins that
+    the coercion path stays decision-for-decision identical."""
+    from repro.sim import (ServeSim, ServingCost, Simulator,
+                           poisson_requests, v5e_serving)
+    reqs = poisson_requests(20, 200.0, seed=7)
+    srv = ServeSim(cost=ServingCost.from_params(1e9, layers=4,
+                                                d_model=128, chips=16),
+                   requests=reqs, slots=3, seq_capacity=1024)
+    Simulator(v5e_serving(4, 4, replicas=2), srv,
+              workers=workers).run_to_completion()
+    return {
+        "arrivals": [r.arrival_tick for r in reqs],
+        "decisions": [[d.kind, d.rid, d.slot, d.step, d.reason]
+                      for s in srv.schedulers for d in s.decisions],
+        "ttft_state": srv.p_ttft.state_dict(),
+    }
+
+
+def train_digest(workers: int):
+    """TrainSim fault-injection decision log under the workers knob."""
+    from repro.configs import get_config
+    from repro.sim import (Simulator, TrainSim, TrainStepCost,
+                           v5e_unreliable)
+    from repro.train.ft_policy import FTPolicy
+    board = v5e_unreliable(4, seed=11, horizon=100, mtbf=30.0,
+                           straggler_mtbs=60.0, repair=(10, 30),
+                           nx=4, ny=4)
+    pol = FTPolicy(get_config("deepseek-67b"), num_steps=30,
+                   ckpt_interval=10, pods=4, chips_per_pod=16)
+    ts = TrainSim(
+        cost=TrainStepCost.from_params(1e9, tokens_per_batch=100_000,
+                                       chips=64),
+        policy=pol, schedule=board.failure_schedule)
+    Simulator(board, ts, workers=workers).run_to_completion()
+    return {
+        "decisions": [d.to_row() for d in pol.decisions],
+        "final_tick": ts.summary()["makespan_s"],
+        "step_state": ts.p_step.state_dict(),
+    }
+
+
+if __name__ == "__main__":
+    workers = int(sys.argv[1])
+    json.dump({"static": static_digest(workers),
+               "serve": serve_digest(workers),
+               "train": train_digest(workers)},
+              sys.stdout, sort_keys=True)

@@ -1,0 +1,282 @@
+"""ParallelEngine exactness: multiprocess pod sharding must be
+*bit-identical* to the serial TraceExecutor (dist-gem5's correctness
+bar, paper §2.17 — quantum-based synchronization must not change
+simulated behaviour, only wall clock).
+
+Enforced here:
+
+* full :class:`ExecResult` equality (makespan, per-chip busy, timeline,
+  stats tree, event counts) on homogeneous and straggler boards,
+* free-run mode (no cross-pod DCN traffic) equality,
+* ``mp_context="spawn"`` equality (the fork-unsafe path),
+* drained snapshots JSON-identical to serial — including one taken
+  **mid-rendezvous** (a DCN collective with some pods arrived, some
+  not),
+* worker-count-agnostic checkpoints: a snapshot taken under N workers
+  restores under M workers (N→1, 1→N, N→N) with identical results,
+* the ``Simulator`` front-end's ``workers=`` knob: same exit events
+  (work markers), same result,
+* serial fallbacks: configurations the parallel plan can't shard run
+  through the exact-by-construction serial facade.
+
+A restored run legitimately differs from a never-paused run in ONE
+field: ``ExecResult.events`` counts one extra re-issue event per
+deferred frontier op (see ``TraceExecutor.restore``).  Restore tests
+therefore compare restored-vs-restored in full, and restored-vs-
+uninterrupted on every field except ``events``.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.parallel import ParallelEngine
+from repro.core.desim.trace import analytic_trace
+from repro.sim import (ExitEventType, Simulator, checkpoint_executor,
+                       parallel_supported, restore_executor, run_parallel,
+                       v5e_multipod, v5e_straggler)
+
+# a drain at this tick lands INSIDE the tail DCN all-reduce's rendezvous
+# on the straggler board below: pods 0-2 have arrived, the 2x-slow pod 3
+# has not (asserted in the checkpoint test, so a cost-model change that
+# moves the window fails loudly instead of silently degrading the test)
+MID_RENDEZVOUS_TICK = 125_000_000
+
+
+def _trace(dcn=True):
+    tail = ([{"kind": "all-reduce", "bytes": 5e8, "scope": "dcn"}]
+            if dcn else [])
+    return analytic_trace(
+        "t", layers=6, layer_flops=2e12, layer_bytes=1e10,
+        layer_collectives=[{"kind": "all-reduce", "bytes": 2e8}],
+        tail_collectives=tail)
+
+
+def _board():
+    return v5e_multipod(num_pods=4, nx=4, ny=4)
+
+
+def _straggler_board():
+    return v5e_straggler(num_pods=4, slowdown=2.0, nx=4, ny=4)
+
+
+def _cfg(board):
+    return dict(algorithm=board.algorithm,
+                straggler_slowdowns=board.straggler_slowdowns,
+                record_stats=True, timing="detailed")
+
+
+def _assert_equal_sans_events(got, ref):
+    for f in dataclasses.fields(ref):
+        if f.name == "events":
+            continue
+        assert getattr(got, f.name) == getattr(ref, f.name), f.name
+
+
+@pytest.fixture(scope="module")
+def serial_ref():
+    return _board().executor(record_stats=True).execute(_trace())
+
+
+@pytest.fixture(scope="module")
+def serial_straggler_ref():
+    return _straggler_board().executor(record_stats=True).execute(_trace())
+
+
+# ---------------------------------------------------------------------------
+# bit-identity, complete runs
+# ---------------------------------------------------------------------------
+
+def test_parallel_identical_homogeneous(serial_ref):
+    got = run_parallel(_board(), _trace(), workers=2, record_stats=True)
+    assert got == serial_ref            # full ExecResult, stats included
+
+
+def test_parallel_identical_straggler(serial_straggler_ref):
+    # heterogeneous pods, uneven shard (4 pods across 3 workers)
+    got = run_parallel(_straggler_board(), _trace(), workers=3,
+                       record_stats=True)
+    assert got == serial_straggler_ref
+
+
+def test_parallel_free_run_identical():
+    # no DCN ops -> workers free-run to completion with no barriers
+    board = _board()
+    ref = board.executor(record_stats=True).execute(_trace(dcn=False))
+    eng = ParallelEngine(board.machine, workers=4, **_cfg(board))
+    assert eng._parallel_plan(_trace(dcn=False), None) == "free"
+    try:
+        assert eng.execute(_trace(dcn=False)) == ref
+    finally:
+        eng.close()
+
+
+def test_spawn_context_identical(serial_ref):
+    got = run_parallel(_board(), _trace(), workers=2, mp_context="spawn",
+                       record_stats=True)
+    assert got == serial_ref
+
+
+# ---------------------------------------------------------------------------
+# checkpoints: mid-rendezvous + worker-count changes
+# ---------------------------------------------------------------------------
+
+def _paused_snapshot(engine_or_ex):
+    engine_or_ex.advance(max_tick=MID_RENDEZVOUS_TICK)
+    engine_or_ex.drain()
+    return engine_or_ex.snapshot()
+
+
+def test_mid_rendezvous_snapshot_identical():
+    board = _straggler_board()
+    es = TraceExecutor(board.machine, **_cfg(board))
+    es.begin(_trace())
+    ssnap = _paused_snapshot(es)
+    # the scenario guard: the pause really is mid-rendezvous
+    assert ssnap["rendezvous"], "drain tick no longer lands mid-rendezvous"
+    arrived = {p for p, _ in ssnap["rendezvous"][0]["arrivals"]}
+    assert 0 < len(arrived) < board.machine.num_pods
+
+    ep = ParallelEngine(board.machine, workers=3, **_cfg(board))
+    ep.begin(_trace())
+    psnap = _paused_snapshot(ep)
+    ep.close()
+    assert (json.dumps(psnap, sort_keys=True)
+            == json.dumps(ssnap, sort_keys=True))
+
+
+def test_worker_count_change_restore(serial_straggler_ref):
+    board = _straggler_board()
+    cfg = _cfg(board)
+    ep = ParallelEngine(board.machine, workers=4, **cfg)
+    ep.begin(_trace())
+    snap = _paused_snapshot(ep)
+    ep.close()
+    assert snap["rendezvous"]
+
+    # 4 -> 1: the parallel snapshot restores into a plain serial executor
+    r1 = TraceExecutor(board.machine, **cfg).restore(_trace(), snap)
+    r1.advance()
+    res1 = r1.result()
+    # 4 -> 3: and into a differently-sharded parallel engine
+    e3 = ParallelEngine(board.machine, workers=3, **cfg).restore(
+        _trace(), snap)
+    e3.advance()
+    res3 = e3.result()
+    e3.close()
+
+    assert res1 == res3                 # restored runs: full equality
+    _assert_equal_sans_events(res1, serial_straggler_ref)
+
+
+def test_serial_snapshot_restores_under_workers(serial_straggler_ref):
+    board = _straggler_board()
+    cfg = _cfg(board)
+    es = TraceExecutor(board.machine, **cfg)
+    es.begin(_trace())
+    snap = _paused_snapshot(es)
+
+    e4 = ParallelEngine(board.machine, workers=4, **cfg).restore(
+        _trace(), snap)
+    e4.advance()
+    res4 = e4.result()
+    e4.close()
+    r1 = TraceExecutor(board.machine, **cfg).restore(_trace(), snap)
+    r1.advance()
+
+    assert res4 == r1.result()
+    _assert_equal_sans_events(res4, serial_straggler_ref)
+
+
+def test_checkpoint_document_roundtrip_across_worker_counts():
+    """The full serialize-layer path: checkpoint a drained parallel
+    engine via ``checkpoint_executor`` and restore via
+    ``restore_executor(..., workers=N)``."""
+    board = _board()
+    eng = board.executor(workers=2, record_stats=True)
+    eng.begin(_trace())
+    eng.advance(max_tick=60_000_000)
+    eng.drain()
+    ckpt = checkpoint_executor(eng)
+    eng.close()
+
+    r1 = restore_executor(ckpt, machine=board.machine)
+    r1.advance()
+    r4 = restore_executor(ckpt, machine=board.machine, workers=4)
+    r4.advance()
+    assert r4.result() == r1.result()
+    r4.close()
+
+
+# ---------------------------------------------------------------------------
+# Simulator front-end
+# ---------------------------------------------------------------------------
+
+def _run_simulator(workers):
+    from repro.core.desim.trace import TraceOp
+    tr = _trace()
+    n = len(tr.ops)
+    tr.ops.append(TraceOp(kind="compute", flops=1e9, bytes=1e6,
+                          deps=(n - 1,), name="work_end_roi"))
+    old = tr.ops[1]
+    tr.ops[1] = TraceOp(kind=old.kind, flops=old.flops, bytes=old.bytes,
+                        deps=old.deps, name="work_begin_roi")
+    sim = Simulator(_board(), tr, record_stats=True, workers=workers)
+    events = [(e.kind, e.tick, e.cause) for e in sim.run()]
+    return events, sim.result(), sim.tick
+
+
+def test_simulator_workers_knob_same_exit_events():
+    ev1, res1, tick1 = _run_simulator(workers=1)
+    ev4, res4, tick4 = _run_simulator(workers=4)
+    assert ev1 == ev4                   # incl. WORK_BEGIN/WORK_END ticks
+    assert res1 == res4
+    assert tick1 == tick4
+    kinds = [k for k, _, _ in ev4]
+    assert ExitEventType.WORK_BEGIN in kinds
+    assert ExitEventType.WORK_END in kinds
+
+
+# ---------------------------------------------------------------------------
+# serial fallbacks + helpers
+# ---------------------------------------------------------------------------
+
+def test_atomic_timing_with_dcn_falls_back_to_serial(serial_ref):
+    board = _board()
+    eng = ParallelEngine(board.machine, workers=2, algorithm=board.algorithm,
+                         record_stats=True, timing="atomic")
+    assert eng._parallel_plan(_trace(), None) is None
+    ref = board.executor(record_stats=True, timing="atomic").execute(_trace())
+    try:
+        assert eng.execute(_trace()) == ref
+    finally:
+        eng.close()
+
+
+def test_parallel_supported_helper():
+    board = _board()
+    assert parallel_supported(board, _trace(), timing="detailed")
+    assert not parallel_supported(board, _trace(), timing="atomic")
+    # atomic CAN shard when there is no cross-pod traffic to order
+    assert parallel_supported(board, _trace(dcn=False), timing="atomic")
+
+
+def test_single_pod_board_falls_back_to_serial():
+    from repro.sim import v5e_pod
+    board = v5e_pod()
+    ref = board.executor(record_stats=True).execute(_trace(dcn=False))
+    got = run_parallel(board, _trace(dcn=False), workers=4,
+                       record_stats=True)
+    assert got == ref
+
+
+def test_close_is_idempotent():
+    eng = ParallelEngine(_board().machine, workers=2,
+                         algorithm="torus2d", timing="detailed")
+    eng.begin(_trace())
+    eng.advance()
+    eng.result()
+    eng.close()
+    eng.close()

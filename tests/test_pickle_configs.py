@@ -1,0 +1,58 @@
+"""Pickle round-trips for everything the multiprocess engine ships to
+workers (``repro.core.desim.parallel`` sends its init payload over a
+``multiprocessing.Pipe``, and ``mp_context="spawn"`` pickles the whole
+worker bootstrap): trace ops, traces, machines, boards.  A round-tripped
+object must not just survive — it must *simulate identically*."""
+
+import pickle
+
+from repro.core.desim.trace import HloTrace, TraceOp, analytic_trace
+from repro.sim.boards import v5e_multipod, v5e_pod, v5e_straggler
+
+
+def _rt(obj):
+    return pickle.loads(pickle.dumps(obj))
+
+
+def _trace():
+    return analytic_trace(
+        "t", layers=3, layer_flops=1e12, layer_bytes=1e9,
+        layer_collectives=[{"kind": "all-reduce", "bytes": 1e7}],
+        tail_collectives=[{"kind": "all-reduce", "bytes": 2e7,
+                           "scope": "dcn"}])
+
+
+def test_traceop_roundtrip():
+    op = TraceOp(kind="collective", flops=0.0, bytes=5e8, coll_bytes=5e8,
+                 deps=(0, 2), name="ar.7", scope="dcn", participants=256)
+    assert _rt(op) == op
+
+
+def test_trace_roundtrip_identical_json():
+    tr = _trace()
+    rt = _rt(tr)
+    assert rt.to_json() == tr.to_json()
+    assert [o == p for o, p in zip(rt.ops, tr.ops)] == [True] * len(tr.ops)
+
+
+def test_machine_roundtrip_serializes_identically():
+    m = v5e_multipod(num_pods=4, nx=4, ny=4).machine
+    assert _rt(m).serialize() == m.serialize()
+
+
+def test_board_roundtrip_simulates_identically():
+    for board in (v5e_pod(),
+                  v5e_multipod(num_pods=2, nx=4, ny=4),
+                  v5e_straggler(num_pods=2, slowdown=1.5, nx=4, ny=4)):
+        rt = _rt(board)
+        assert rt.name == board.name
+        assert rt.algorithm == board.algorithm
+        assert rt.straggler_slowdowns == board.straggler_slowdowns
+        ref = board.executor(record_stats=True).execute(_trace())
+        got = rt.executor(record_stats=True).execute(_trace())
+        assert got == ref
+
+
+def test_empty_trace_roundtrip():
+    tr = HloTrace("empty")
+    assert _rt(tr).to_json() == tr.to_json()

@@ -1,0 +1,222 @@
+"""Stat/StatGroup merge semantics (the parallel-engine reduction).
+
+The multiprocess engine (``repro.core.desim.parallel``) reassembles one
+gem5-style stats tree from per-worker slices via ``StatGroup.merge`` /
+``merge_state_dict``; these unit tests pin the algebra that makes the
+reassembly exact:
+
+* serial equivalence — splitting a sample stream across two stats and
+  merging equals accumulating the whole stream into one stat,
+* commutativity — a merge order must not change the combined value,
+* adopt-verbatim — merging into a zero/empty stat is *bit*-exact, which
+  is the property the engine actually leans on (each worker owns its
+  counters exclusively, the facade's copies stay zero until collect).
+"""
+
+import math
+import random
+
+import pytest
+
+from repro.core.stats import (Distribution, Percentiles, Scalar, StatGroup,
+                              Vector)
+
+
+def _dist(name, samples):
+    d = Distribution(name)
+    for v in samples:
+        d.sample(v)
+    return d
+
+
+def _pct(name, samples, rel_err=0.01):
+    p = Percentiles(name, rel_err=rel_err)
+    for v in samples:
+        p.sample(v)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Scalar / Vector
+# ---------------------------------------------------------------------------
+
+def test_scalar_merge_adds():
+    a, b = Scalar("s"), Scalar("s")
+    a.inc(3.0)
+    b.inc(4.5)
+    a.merge(b)
+    assert a.value() == 7.5
+    assert b.value() == 4.5            # source untouched
+
+
+def test_scalar_merge_into_zero_is_bit_exact():
+    src = Scalar("s")
+    src.inc(0.1 + 0.2)                 # a value with fp texture
+    dst = Scalar("s")
+    dst.merge(src)
+    assert dst.state_dict() == src.state_dict()
+
+
+def test_vector_merge_elementwise():
+    a, b = Vector("v", 3), Vector("v", 3)
+    a.inc(0, 1.0)
+    a.inc(2, 5.0)
+    b.inc(1, 2.0)
+    b.inc(2, 0.5)
+    a.merge(b)
+    assert a.value() == [1.0, 2.0, 5.5]
+
+
+def test_vector_merge_size_mismatch_raises():
+    a, b = Vector("v", 3), Vector("v", 4)
+    with pytest.raises(ValueError, match="size mismatch"):
+        a.merge(b)
+
+
+def test_merge_rejects_kind_mismatch():
+    with pytest.raises(TypeError, match="cannot merge"):
+        Scalar("x").merge(Vector("x", 2))
+
+
+# ---------------------------------------------------------------------------
+# Distribution (Chan et al. parallel Welford)
+# ---------------------------------------------------------------------------
+
+def test_distribution_serial_equivalence():
+    rng = random.Random(7)
+    xs = [rng.uniform(-5, 50) for _ in range(500)]
+    whole = _dist("d", xs)
+    a, b = _dist("d", xs[:173]), _dist("d", xs[173:])
+    a.merge(b)
+    assert a.count == whole.count
+    assert a.value()["min"] == whole.value()["min"]
+    assert a.value()["max"] == whole.value()["max"]
+    assert a.mean == pytest.approx(whole.mean, rel=1e-12)
+    assert a.stddev == pytest.approx(whole.stddev, rel=1e-9)
+
+
+def test_distribution_commutative():
+    rng = random.Random(11)
+    xs = [rng.gauss(10, 3) for _ in range(200)]
+    ab = _dist("d", xs[:60])
+    ab.merge(_dist("d", xs[60:]))
+    ba = _dist("d", xs[60:])
+    ba.merge(_dist("d", xs[:60]))
+    assert ab.count == ba.count
+    assert ab.mean == pytest.approx(ba.mean, rel=1e-12)
+    assert ab.stddev == pytest.approx(ba.stddev, rel=1e-9)
+
+
+def test_distribution_merge_empty_sides():
+    xs = [1.0, 2.0, 4.0]
+    d = _dist("d", xs)
+    d.merge(Distribution("d"))          # empty rhs: no-op
+    assert d.state_dict() == _dist("d", xs).state_dict()
+    e = Distribution("d")
+    e.merge(_dist("d", xs))             # empty lhs: adopt verbatim
+    assert e.state_dict() == _dist("d", xs).state_dict()
+
+
+# ---------------------------------------------------------------------------
+# Percentiles (DDSketch bin-wise merge)
+# ---------------------------------------------------------------------------
+
+def test_percentiles_serial_equivalence():
+    rng = random.Random(3)
+    xs = [rng.expovariate(1 / 50.0) for _ in range(800)] + [0.0, 0.0]
+    whole = _pct("p", xs)
+    a, b = _pct("p", xs[:300]), _pct("p", xs[300:])
+    a.merge(b)
+    sa, sw = a.state_dict(), whole.state_dict()
+    assert sa["bins"] == sw["bins"]      # integer bin counts: exact
+    assert sa["count"] == sw["count"]
+    assert sa["min"] == sw["min"] and sa["max"] == sw["max"]
+    assert sa["sum"] == pytest.approx(sw["sum"], rel=1e-12)
+    for q in (0.5, 0.9, 0.99):
+        assert a.quantile(q) == whole.quantile(q)
+
+
+def test_percentiles_commutative_bitwise_on_bins():
+    xs = [float(i) for i in range(1, 101)]
+    ab = _pct("p", xs[:37])
+    ab.merge(_pct("p", xs[37:]))
+    ba = _pct("p", xs[37:])
+    ba.merge(_pct("p", xs[:37]))
+    assert ab.state_dict()["bins"] == ba.state_dict()["bins"]
+    assert ab.quantile(0.99) == ba.quantile(0.99)
+
+
+def test_percentiles_rel_err_mismatch_raises():
+    with pytest.raises(ValueError):
+        Percentiles("p", rel_err=0.01).merge(Percentiles("p", rel_err=0.05))
+
+
+def test_percentiles_merge_into_empty_is_bit_exact():
+    src = _pct("p", [0.3, 7.7, 123.4])
+    dst = Percentiles("p")
+    dst.merge(src)
+    assert dst.state_dict() == src.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# StatGroup tree merge
+# ---------------------------------------------------------------------------
+
+def _tree():
+    g = StatGroup("sim")
+    g.scalar("ticks")
+    sub = StatGroup("chip0")
+    sub.scalar("flops")
+    sub.distribution("op_ns")
+    g.add_child(sub)
+    return g
+
+
+def test_group_merge_recurses():
+    a, b = _tree(), _tree()
+    a["ticks"].inc(10)
+    a["chip0.flops"].inc(100)
+    a["chip0.op_ns"].sample(5.0)
+    b["ticks"].inc(32)
+    b["chip0.flops"].inc(11)
+    b["chip0.op_ns"].sample(9.0)
+    a.merge(b)
+    assert a["ticks"].value() == 42
+    assert a["chip0.flops"].value() == 111
+    assert a["chip0.op_ns"].count == 2
+
+
+def test_group_merge_into_zero_tree_is_bit_exact():
+    src = _tree()
+    src["ticks"].inc(0.1 + 0.2)
+    src["chip0.op_ns"].sample(math.pi)
+    dst = _tree()
+    dst.merge(src)
+    assert dst.state_dict() == src.state_dict()
+
+
+def test_group_merge_strict_rejects_shape_mismatch():
+    a, b = _tree(), _tree()
+    extra = StatGroup("chip1")
+    extra.scalar("flops")
+    b.add_child(extra)
+    with pytest.raises(KeyError):
+        a.merge(b, strict=True)
+    a.merge(b)                          # lenient: unknown subtree skipped
+    with pytest.raises(KeyError):
+        a["chip1.flops"]
+
+
+def test_merge_state_dict_partial_subtree():
+    """The engine's collect path: merge one worker's ``chip{g}`` slice
+    (as a state dict) into the facade tree without touching siblings."""
+    a = _tree()
+    a["chip0.flops"].inc(5)
+    donor = _tree()
+    donor["chip0.flops"].inc(37)
+    donor["chip0.op_ns"].sample(2.5)
+    sd = donor.state_dict()["children"]["chip0"]
+    a.merge_state_dict({"children": {"chip0": sd}})
+    assert a["chip0.flops"].value() == 42
+    assert a["chip0.op_ns"].count == 1
+    assert a["ticks"].value() == 0      # untouched sibling

@@ -23,6 +23,13 @@
 #                            # Timing on the pod_torus reference trace
 #                            # (and tick-exact there) — fails loudly if
 #                            # the fast path regresses
+#   tools/ci.sh parallel     # parallel-smoke tier: asserts the multi-
+#                            # process ParallelEngine (workers=4) is
+#                            # >= 2x faster wall-clock than the serial
+#                            # TraceExecutor on the 32-pod reference
+#                            # workload AND bit-exact (full ExecResult
+#                            # + stats-tree equality) — fails loudly if
+#                            # pod sharding / clone folding regresses
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -36,6 +43,12 @@ if [ "${1-}" = "perf" ]; then
   shift
   python -m benchmarks.engine_microbench --assert-speedup 3
   echo "perf tier OK"
+  exit 0
+fi
+if [ "${1-}" = "parallel" ]; then
+  shift
+  python -m benchmarks.distgem5_scaling --assert-parallel 2
+  echo "parallel tier OK"
   exit 0
 fi
 if [ "${1-}" = "smoke" ]; then
