@@ -1,0 +1,199 @@
+"""Observability overhead + fidelity benchmark (the ``trace`` tier).
+
+The observability layer's house rule is gem5's: tracing must *observe*,
+never *perturb*.  Two enforceable halves:
+
+* **flags-disabled cost**: with no debug flag enabled every ``DPRINTF``
+  is a suppressed call (or skipped outright behind an ``_ACTIVE``
+  guard).  The per-call kill-switch cost times the number of suppressed
+  calls on the pod_torus reference lap must stay under a few percent of
+  the lap's wall time (``--assert-overhead 5`` is the CI gate).
+* **bit-identity**: a fully-instrumented lap (every flag enabled, DPRINTF
+  to a sink, m5out stats dumps, Perfetto trace recording, workers=4)
+  must produce the exact same final tick / event count / stats tree as
+  a bare lap.  Asserted here on every run, not just in the test suite.
+
+CLI (the ``tools/ci.sh trace`` tier)::
+
+    python -m benchmarks.observability                      # rows only
+    python -m benchmarks.observability --assert-overhead 5
+        # exit 1 LOUDLY if the flags-disabled DPRINTF tax exceeds 5%
+        # of pod_torus wall time, or if instrumented != bare
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.core import trace as dbg
+from repro.core.desim.trace import analytic_trace
+from repro.sim import (Simulator, repeat_trace, v5e_pod, v5e_straggler,
+                       validate_trace_events)
+
+COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 256}]
+DCN_TAIL = [{"kind": "all-gather", "bytes": 5e7, "participants": 64,
+             "scope": "dcn"}]
+STEPS = 40
+
+
+def _pod_torus():
+    return (v5e_pod(),
+            repeat_trace(analytic_trace("golden", 6, 1e12, 1e9, COLLS),
+                         STEPS))
+
+
+def _multipod():
+    return (v5e_straggler(num_pods=4, nx=4, ny=4),
+            repeat_trace(analytic_trace("golden", 4, 1e12, 1e9, COLLS,
+                                        tail_collectives=DCN_TAIL), 5))
+
+
+def _lap(board, trace, repeats: int = 3, **sim_kwargs):
+    """Best-of-N wall seconds plus the last lap's ExecResult."""
+    best = res = None
+    for _ in range(repeats):
+        sim = Simulator(board, trace, **sim_kwargs)
+        t0 = time.perf_counter()
+        sim.run_to_completion()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+        res = sim.result()
+    return best, res
+
+
+def _disabled_call_ns(iters: int = 200_000) -> float:
+    """Cost of one suppressed ``dprintf`` (flags off, no guard)."""
+    dbg.disable()
+    dp = dbg.dprintf
+    for _ in range(1000):                       # warmup
+        dp("Exec", None, "x %d", 1)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        dp("Exec", None, "x %d", 1)
+    return (time.perf_counter() - t0) / iters * 1e9
+
+
+def _suppressed_on_lap(board, trace) -> int:
+    """DPRINTF call-sites hit on one bare lap (counting mode keeps the
+    ``_ACTIVE`` guards open, so guarded hot-path sites are counted too —
+    a conservative overestimate of the disabled-mode tax)."""
+    with dbg.counting():
+        Simulator(board, trace).run_to_completion()
+        return dbg.suppressed_calls()
+
+
+def measure():
+    """The tier's numbers: wall on/off, overhead model, identity."""
+    board, trace = _pod_torus()
+    wall_off, res_off = _lap(board, trace)
+
+    # fully instrumented lap: all flags, sink output, m5out, Perfetto
+    d = tempfile.mkdtemp(prefix="g5x-trace-bench-")
+    dbg.enable("All")
+    sink = open(os.devnull, "w")
+    dbg.set_output(sink)
+    try:
+        wall_on, res_on = _lap(board, trace, repeats=1, outdir=d,
+                               trace_events=True)
+    finally:
+        dbg.disable()
+        dbg.set_output(None)
+        sink.close()
+
+    with open(os.path.join(d, "telemetry.json")) as f:
+        telemetry = json.load(f)           # the machine-readable banner
+
+    calls = _suppressed_on_lap(board, trace)
+    call_ns = _disabled_call_ns()
+    overhead_pct = calls * call_ns / (wall_off * 1e9) * 100.0
+    identical = (res_on.makespan_s == res_off.makespan_s
+                 and res_on.events == res_off.events)
+    return {"wall_off": wall_off, "wall_on": wall_on,
+            "calls": calls, "call_ns": call_ns,
+            "overhead_pct": overhead_pct, "identical": identical,
+            "outdir": d, "result": res_off, "telemetry": telemetry}
+
+
+def _check_parallel_trace() -> int:
+    """workers=4 traced lap: bit-identical to serial, and the merged
+    Perfetto file must validate with worker/pod/DCN/barrier tracks."""
+    board, trace = _multipod()
+    _, res_serial = _lap(board, trace, repeats=1)
+    d = tempfile.mkdtemp(prefix="g5x-trace-par-")
+    sim = Simulator(board, trace, workers=4, outdir=d, trace_events=True)
+    sim.run_to_completion()
+    res = sim.result()
+    if (res.makespan_s, res.events) != (res_serial.makespan_s,
+                                        res_serial.events):
+        raise SystemExit("trace tier FAILED: workers=4 traced lap "
+                         f"diverged ({res.makespan_s} != "
+                         f"{res_serial.makespan_s})")
+    with open(os.path.join(d, "trace.json")) as f:
+        doc = json.load(f)
+    problems = validate_trace_events(doc)
+    if problems:
+        raise SystemExit("trace tier FAILED: invalid trace-event JSON: "
+                         + "; ".join(problems[:5]))
+    return len(doc["traceEvents"])
+
+
+def run() -> None:
+    m = measure()
+    emit("obs/pod_torus/flags_off", m["wall_off"] * 1e6,
+         f"events={m['result'].events} "
+         f"makespan={m['result'].makespan_s:.4f}s")
+    emit("obs/pod_torus/fully_traced", m["wall_on"] * 1e6,
+         f"identical={m['identical']} m5out+perfetto+dprintf(All)")
+    emit("obs/dprintf_disabled", m["call_ns"] / 1e3,
+         f"ns_per_call={m['call_ns']:.1f}")
+    emit("obs/pod_torus/disabled_overhead", m["overhead_pct"],
+         f"suppressed_calls={m['calls']} "
+         f"pct_of_wall={m['overhead_pct']:.3f}%")
+    tel = m["telemetry"]
+    emit("obs/pod_torus/host_telemetry", tel["host_seconds"] * 1e6,
+         f"final_tick={tel['final_tick']} "
+         f"sim_seconds={tel['sim_seconds']:.4f} "
+         f"sim_rate={tel['sim_rate']:.2f}x events={tel['events']} "
+         f"events_per_host_sec={tel['events_per_host_sec']:.0f}")
+    n_events = _check_parallel_trace()
+    emit("obs/multipod_w4/trace_events", float(n_events),
+         "merged workers=4 Perfetto file validates")
+
+
+def assert_overhead(threshold_pct: float) -> None:
+    """CI trace-smoke: flags-disabled tax under threshold, and the
+    instrumented lap bit-identical to the bare one."""
+    m = measure()
+    print(f"trace-smoke [pod_torus]: bare {m['wall_off'] * 1e3:.1f}ms, "
+          f"{m['calls']} suppressed dprintf calls x "
+          f"{m['call_ns']:.0f}ns = {m['overhead_pct']:.3f}% of wall "
+          f"(threshold {threshold_pct:.1f}%)")
+    if not m["identical"]:
+        print("trace-smoke FAILED: fully-instrumented lap is not "
+              "bit-identical to the bare lap — tracing perturbed the "
+              "simulation", file=sys.stderr)
+        raise SystemExit(1)
+    if m["overhead_pct"] >= threshold_pct:
+        print(f"trace-smoke FAILED: flags-disabled DPRINTF overhead "
+              f"{m['overhead_pct']:.2f}% >= {threshold_pct:.1f}% of "
+              "pod_torus wall time — the kill-switch fast path "
+              "regressed", file=sys.stderr)
+        raise SystemExit(1)
+    n = _check_parallel_trace()
+    print(f"trace-smoke: workers=4 merged trace OK ({n} events); "
+          f"m5out at {m['outdir']}")
+    print("trace-smoke OK")
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--assert-overhead" in args:
+        i = args.index("--assert-overhead")
+        assert_overhead(float(args[i + 1]))
+    else:
+        run()

@@ -23,7 +23,7 @@ import traceback
 from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
                         distgem5_scaling, elastic_trace, engine_microbench,
                         fidelity_spectrum, ft_sweep, kernel_throughput,
-                        roofline, sampled_sim, serving_sweep)
+                        observability, roofline, sampled_sim, serving_sweep)
 from benchmarks.common import rows_as_dict
 
 BENCHES = [
@@ -39,6 +39,7 @@ BENCHES = [
     ("kernel_throughput", kernel_throughput.run),
     ("dse_sweep", dse_sweep.run),
     ("roofline", roofline.run),
+    ("observability", observability.run),
 ]
 
 JSON_PATH = "BENCH_desim.json"

@@ -11,7 +11,16 @@
                                     checkpoint / restore / re-sweep)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Observability (PR 7, gem5 m5out/DPRINTF): add ``--trace-dir DIR`` to
+dump a gem5-style output directory from step 6's simulation — stats.txt,
+config.json, telemetry.json, and a Perfetto trace.json (open at
+https://ui.perfetto.dev) — and ``--debug-flags Exec,Dcn`` (or ``All``)
+to stream DPRINTF lines.  Both off by default; results are identical
+either way.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +34,17 @@ from repro.models import build_model
 from repro.sim import (ExitEventType, Simulator, SteadyStateWorkload,
                        v5e_pod)
 from repro.train import TrainOptions, build_train_step, init_train_state
+
+ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                help="write an m5out-style dir (stats.txt, config.json, "
+                     "telemetry.json, Perfetto trace.json) for step 6")
+ap.add_argument("--debug-flags", default=None, metavar="FLAGS",
+                help="comma-separated DPRINTF flags (e.g. Exec,Dcn or All)")
+cli = ap.parse_args()
+if cli.debug_flags:
+    from repro.sim import enable_debug_flags
+    enable_debug_flags(cli.debug_flags)
 
 # -- 1. config --------------------------------------------------------------
 cfg = smoke(get_config("olmoe-1b-7b"))           # reduced MoE config
@@ -69,7 +89,10 @@ step_trace = analytic_trace(
     "quick_step", L, (rep.flops or 0.0) / L, (rep.bytes_accessed or 0.0) / L,
     [{"kind": "all-reduce", "bytes": 2 * (rep.bytes_accessed or 0.0) / L,
       "participants": 256}])
-sim = Simulator(v5e_pod(), SteadyStateWorkload(step_trace, 16))
+sim = Simulator(v5e_pod(), SteadyStateWorkload(step_trace, 16),
+                outdir=cli.trace_dir,
+                trace_events=cli.trace_dir is not None,
+                verbose=cli.trace_dir is not None)
 per_step = v5e_pod().executor().execute(step_trace).makespan_s
 mid = int(per_step * 1e9 * 4)                  # ticks are ns: 4 steps in
 sim.schedule_max_tick(mid)                     # pause after ~4 steps...
@@ -86,4 +109,7 @@ fast = Simulator.from_checkpoint(ckpt, board=v5e_pod(
 res_fast = fast.run_to_completion()
 print(f"simulator: 16-step nominal={sim.result().makespan_s:.3e}s "
       f"2xHBM-from-checkpoint={res_fast.makespan_s:.3e}s")
+if cli.trace_dir:
+    print(f"wrote m5out-style output dir: {cli.trace_dir}/"
+          "{stats.txt,config.json,telemetry.json,trace.json}")
 print("quickstart OK")

@@ -59,6 +59,7 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import trace as dbg
 from repro.core.desim.collectives import get_algorithm
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import (ChipSim, ClusterSim, DcnSim,
@@ -136,7 +137,8 @@ class TraceExecutor:
                  record_stats: bool = False,
                  contention: Optional[bool] = None, timing=None,
                  pod_labels: Optional[List[int]] = None,
-                 dcn_capture: Optional[Callable[[dict], None]] = None):
+                 dcn_capture: Optional[Callable[[dict], None]] = None,
+                 instrument=None):
         self.machine = machine
         self.algorithm = algorithm
         self.alg = get_algorithm(algorithm)
@@ -181,6 +183,11 @@ class TraceExecutor:
         # instead of the in-process rendezvous — the parallel engine's
         # coordinator owns the shared fabric.
         self._dcn_capture = dcn_capture
+        # Optional timeline recorder (repro.sim.instrument.
+        # TraceEventRecorder duck-type): ``op_event`` fires once per
+        # completed op per pod; read-only — tracing on vs off is
+        # bit-identical (test-enforced)
+        self.instrument = instrument
         self.sim_root: Optional[ClusterSim] = None
         self.op_hook: Optional[OpHook] = None
         self.injection_hook: Optional[InjectionHook] = None
@@ -239,6 +246,11 @@ class TraceExecutor:
         self._sync = (QuantumSync(self._queues, m.quantum_ns)
                       if needs_dcn and m.quantum_ns > 0
                       and self.timing.detailed else None)
+        if self._sync is not None:
+            # read-only barrier observer (Quantum DPRINTF + Perfetto
+            # barrier track); runs after every queue reached the
+            # boundary, so it cannot perturb event order
+            self._sync.observer = self._sync_observe
         self.sim_root = self._build(self._queues, self._sync)
         # dependency bookkeeping (per pod: SPMD replicas diverge only
         # through stragglers and the shared dcn fabric)
@@ -316,6 +328,9 @@ class TraceExecutor:
             self._op_end[p].append(-1)
             self._remaining[p].append(rem)
         self._injected[idx] = pod
+        if dbg._ACTIVE:
+            dbg.dprintf("Exec", self._queues[pod], "inject %s op=%d",
+                        op.name or op.kind, idx, tick=ready)
         for p in range(pods):
             if p != pod:
                 # non-owning pods never run the op: mark complete now
@@ -344,18 +359,39 @@ class TraceExecutor:
                            dcn=self._routes_dcn(op))
         return payload
 
+    def _sync_observe(self, t: int, delivered: int) -> None:
+        if dbg._ACTIVE:
+            dbg.dprintf("Quantum", "sync", "barrier delivered=%d",
+                        delivered, tick=t)
+        ins = self.instrument
+        if ins is not None:
+            ins.barrier_event(t)
+
     def _issue(self, p: int, idx: int, ready: int) -> None:
         if self._draining:
             # gem5 drain(): newly-ready work is deferred, in-flight
             # events complete.  The deferred frontier is what snapshot()
             # serializes and restore() re-schedules.
             self._deferred.append((p, idx, int(ready)))
+            if dbg._ACTIVE:
+                dbg.dprintf("Ckpt", self._queues[p],
+                            "defer op=%d (draining)", idx, tick=ready)
             return
+        if dbg._ACTIVE:
+            op = self._trace.ops[idx]
+            dbg.dprintf("Exec", self._queues[p], "issue %s op=%d kind=%s",
+                        op.name or op.kind, idx, op.kind, tick=ready)
         self.timing.issue(self, p, idx, ready)
 
     def _on_done(self, start: int, end: int, payload: dict) -> None:
         p, idx = payload["pod"], payload["op_idx"]
         op = self._trace.ops[idx]
+        ins = self.instrument
+        if ins is not None:
+            ins.op_event(self.pod_labels[p], payload, start, end)
+        if dbg._ACTIVE:
+            dbg.dprintf("Exec", self._queues[p], "complete %s op=%d",
+                        payload.get("name", op.kind), idx, tick=end)
         if self._op_end[p][idx] < 0:
             self._ncomplete += 1
         self._op_end[p][idx] = end
@@ -467,8 +503,12 @@ class TraceExecutor:
         may have advanced pods far past the deferred frontier's ready
         ticks, and only a rebuild replays the frontier at its true
         ticks).  Returns ``done()``."""
+        dbg.dprintf("Ckpt", "executor", "drain begin", tick=self.now)
         self._draining = True
-        return self.advance()
+        done = self.advance()
+        dbg.dprintf("Ckpt", "executor", "drain complete deferred=%d",
+                    len(self._deferred), tick=self.now)
+        return done
 
     def drained(self) -> bool:
         return (self._trace is not None and self._draining
@@ -596,6 +636,10 @@ class TraceExecutor:
         # exactly as in an uninterrupted run
         for p, idx, ready in state["deferred"]:
             self.timing.restore_issue(self, int(p), int(idx), int(ready))
+        dbg.dprintf("Ckpt", "executor",
+                    "restored deferred=%d rendezvous=%d timing=%s",
+                    len(state["deferred"]), len(state["rendezvous"]),
+                    self.timing.name, tick=int(state["tick"]))
         return self
 
     # -- lifecycle: result -------------------------------------------------

@@ -53,6 +53,7 @@ import traceback
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import trace as dbg
 from repro.core.desim.executor import ExecResult, TraceExecutor
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import TICKS_PER_S, to_ticks
@@ -170,6 +171,28 @@ def _slice_state(state: Dict[str, Any], reps: List[int],
 # worker process
 # ---------------------------------------------------------------------------
 
+class _WorkerRecorder:
+    """Worker-side timeline recorder: same op-row layout as
+    ``repro.sim.instrument.TraceEventRecorder`` (which merges these rows
+    at collect time), but defined here so ``repro.core`` never imports
+    ``repro.sim``.  Rows are keyed by representative pod label; the
+    coordinator expands SPMD clones."""
+
+    def __init__(self):
+        self.rows: List[list] = []
+
+    def op_event(self, pod: int, payload: dict, start: int,
+                 end: int) -> None:
+        self.rows.append([
+            pod, payload.get("op_idx", -1), payload.get("name", "op"),
+            payload.get("kind", "compute"), payload.get("ready", start),
+            start, end, bool(payload.get("dcn")), payload.get("dur"),
+        ])
+
+    def barrier_event(self, tick: int) -> None:
+        pass   # barriers belong to the coordinator's lane
+
+
 class _ShardRuntime:
     """Worker-side state: a shard TraceExecutor plus the capture/report
     bookkeeping that turns it into a dist-gem5 node."""
@@ -186,6 +209,12 @@ class _ShardRuntime:
         self.stash: Dict[Tuple[int, int], dict] = {}
         self.defer_tags: List[Tuple[int, int]] = []
         self._suppress = False            # restored arrivals: stash only
+        # debug flags don't inherit under spawn: re-apply the parent's
+        self._flags = list(init.get("debug_flags") or [])
+        if self._flags:
+            dbg.enable(self._flags)
+        self.recorder = _WorkerRecorder() if init.get("instrument") \
+            else None
 
         m = ClusterModel(init["machine"].get("name", "cluster"))
         m.load_serialized(init["machine"], strict=False)
@@ -198,7 +227,8 @@ class _ShardRuntime:
             record_stats=init["record_stats"],
             timing=init["timing"],
             pod_labels=labels,
-            dcn_capture=self._capture)
+            dcn_capture=self._capture,
+            instrument=self.recorder)
         if 0 in labels:
             # run-wide markers fire on the pod carrying global label 0;
             # the coordinator replays them into the real op_hook
@@ -244,6 +274,7 @@ class _ShardRuntime:
                 "op": payload["op_idx"], "pod": g,
                 "ready": payload["ready"], "seq": self.seq,
                 "kind": payload.get("kind"),
+                "name": payload.get("name"),
                 "nbytes": payload.get("nbytes"),
                 "participants": payload.get("participants")})
         self.seq += 1
@@ -325,6 +356,8 @@ class _ShardRuntime:
             "defer_tags": [list(t) for t in self.defer_tags],
             "totals": dict(ex._totals),
             "timeline": list(ex._timeline),
+            "trace_rows": (self.recorder.rows if self.recorder is not None
+                           else []),
         }
 
 
@@ -396,13 +429,15 @@ class ParallelEngine:
                  record_timeline: bool = False,
                  straggler_slowdowns: Optional[List[float]] = None,
                  record_stats: bool = False,
-                 contention: Optional[bool] = None, timing=None):
+                 contention: Optional[bool] = None, timing=None,
+                 instrument=None):
         self._facade = TraceExecutor(
             machine, algorithm=algorithm,
             record_timeline=record_timeline,
             straggler_slowdowns=straggler_slowdowns,
             record_stats=record_stats,
-            contention=contention, timing=timing)
+            contention=contention, timing=timing,
+            instrument=instrument)
         self.workers = max(1, int(workers))
         if mp_context is None:
             # fork is cheap (~ms/worker) and the default where available;
@@ -443,6 +478,16 @@ class ParallelEngine:
     @injection_hook.setter
     def injection_hook(self, fn) -> None:
         self._facade.injection_hook = fn
+
+    @property
+    def instrument(self):
+        return self._facade.instrument
+
+    @instrument.setter
+    def instrument(self, rec) -> None:
+        # must be set before begin()/restore(): workers learn whether to
+        # record at spawn time (serial-fallback mode uses it directly)
+        self._facade.instrument = rec
 
     @property
     def now(self) -> int:
@@ -553,6 +598,8 @@ class ParallelEngine:
                 "record_stats": f.record_stats,
                 "record_timeline": f.record_timeline,
                 "barrier_mode": self._mode == "sync",
+                "instrument": f.instrument is not None,
+                "debug_flags": dbg.enabled_flags(),
             }
             if state is not None:
                 init["restore"] = _slice_state(state, reps,
@@ -569,6 +616,8 @@ class ParallelEngine:
                                            self._conns, self._procs)
         for i, conn in enumerate(self._conns):
             self._winfo.append(self._recv(conn, i))
+        dbg.dprintf("Parallel", "engine", "spawned %d workers mode=%s",
+                    len(self._conns), self._mode, tick=self._t_now)
 
     def _recv(self, conn, i: int) -> Dict[str, Any]:
         try:
@@ -622,6 +671,7 @@ class ParallelEngine:
             r["last"] = max(r["last"], a["ready"])
             r["waiters"].append({"pod": a["pod"], "ready": a["ready"]})
             r["kind"] = a["kind"]
+            r["name"] = a.get("name") or a["kind"]
             r["nbytes"] = a["nbytes"]
             r["participants"] = a["participants"]
             if r["arrived"] < f.machine.num_pods:
@@ -644,6 +694,16 @@ class ParallelEngine:
             dcn.st_busy.inc(dur / TICKS_PER_S)
             dcn.st_skew.sample((r["last"] - r["first"]) / TICKS_PER_S)
             deliver = quantum_delivery(r["last"], end - r["last"], quantum)
+            if dbg._ACTIVE:
+                dbg.dprintf("Dcn", "coordinator",
+                            "%s op=%d fire start=%d dur=%d deliver=%d",
+                            r["name"], a["op"], start, dur, deliver,
+                            tick=end)
+            ins = f.instrument
+            if ins is not None:
+                ins.dcn_event(a["op"], r["name"], start, dur, deliver,
+                              [(w["pod"], w["ready"])
+                               for w in r["waiters"]])
             self._pending.append((deliver, {"op": a["op"], "start": start,
                                             "dur": dur,
                                             "deliver": deliver}))
@@ -655,6 +715,12 @@ class ParallelEngine:
                                    "completions": due})
         self._t_now = t
         self._after_barrier(replies)
+        if dbg._ACTIVE:
+            dbg.dprintf("Parallel", "engine", "barrier delivered=%d",
+                        len(due), tick=t)
+        ins = self._facade.instrument
+        if ins is not None:
+            ins.barrier_event(t)
 
     def _advance_sync(self, max_tick: Optional[int],
                       stop_check: Optional[Callable[[], bool]]) -> None:
@@ -753,6 +819,13 @@ class ParallelEngine:
             return
         replies = self._broadcast({"cmd": "collect"})
         f = self._facade
+        ins = f.instrument
+        if ins is not None:
+            for widx, rep in enumerate(replies):
+                ins.add_worker(widx, rep["labels"], rep["members"],
+                               rep.get("trace_rows", []))
+        dbg.dprintf("Parallel", "engine", "collected %d workers",
+                    len(replies), tick=self.now)
         deferred: List[Tuple[Tuple[int, int], int, int, int]] = []
         for rep in replies:
             members = rep["members"]

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import trace as dbg
 from repro.core.desim.collectives import CollectiveAlgorithm
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.network import LinkState, TorusNetwork
@@ -94,6 +95,10 @@ class ChipSim(SimObject):
         self.st_ops.inc()
         self.st_busy.inc(dur / TICKS_PER_S)
         self.st_wait.sample((start - ready) / TICKS_PER_S)
+        if dbg._ACTIVE:
+            dbg.dprintf("Chip", self,
+                        "compute flops=%.3e start=%d dur=%d wait=%d",
+                        flops, start, dur, start - ready, tick=end)
         return start, end
 
     def exec_compute(self, ready: int, flops: float, nbytes: float,
@@ -219,6 +224,16 @@ class WireSim(SimObject):
         self.st_bytes.inc(nbytes)
         self.st_busy.inc(dur / TICKS_PER_S)
         self.st_wait.sample((start - ready) / TICKS_PER_S)
+        if dbg._ACTIVE:
+            if start > ready:
+                dbg.dprintf("Wire.Contention", self,
+                            "%s waited %d ticks on contended links",
+                            payload.get("name", kind), start - ready,
+                            tick=start)
+            dbg.dprintf("Wire", self,
+                        "%s kind=%s nbytes=%g links=%d start=%d dur=%d",
+                        payload.get("name", kind), kind, nbytes,
+                        len(links), start, dur, tick=end)
         done = payload["done"]
         self._eq.schedule(lambda: done(start, end, payload), end,
                           name=payload.get("name", kind))
@@ -232,6 +247,9 @@ class WireSim(SimObject):
         self.st_busy.inc(dur / TICKS_PER_S)
         self.st_wait.sample(0.0)
         self._busy_hwm = max(self._busy_hwm, int(end))
+        if dbg._ACTIVE:
+            dbg.dprintf("Wire", self, "atomic collective nbytes=%g dur=%d",
+                        nbytes, dur, tick=end)
 
     def busy_tick(self) -> int:
         if not self._net.links:
@@ -284,6 +302,11 @@ class DcnSim(SimObject):
 
     # ------------------------------------------------------------------
     def _on_arrive(self, payload: dict) -> dict:
+        if dbg._ACTIVE:
+            dbg.dprintf("Dcn", self, "%s op=%d arrive pod=%d",
+                        payload.get("name", payload.get("kind", "dcn")),
+                        payload["op_idx"], payload.get("pod", -1),
+                        tick=payload["ready"])
         if self._capture is not None:
             self._capture(payload)
             return payload
@@ -316,6 +339,12 @@ class DcnSim(SimObject):
         self.st_bytes.inc(payload["nbytes"])
         self.st_busy.inc(dur / TICKS_PER_S)
         self.st_skew.sample((r["last"] - r["first"]) / TICKS_PER_S)
+        if dbg._ACTIVE:
+            dbg.dprintf("Dcn", self,
+                        "%s op=%d fire start=%d dur=%d skew=%d waiters=%d",
+                        payload.get("name", payload.get("kind", "dcn")),
+                        key, start, dur, r["last"] - r["first"],
+                        len(r["waiters"]), tick=end)
 
         for w in r["waiters"]:
             w.update(start=start, dur=dur)
@@ -346,6 +375,10 @@ class DcnSim(SimObject):
         self.st_bytes.inc(nbytes)
         self.st_busy.inc(dur / TICKS_PER_S)
         self.st_skew.sample(skew / TICKS_PER_S)
+        if dbg._ACTIVE:
+            dbg.dprintf("Dcn", self,
+                        "atomic transaction nbytes=%g dur=%d skew=%d",
+                        nbytes, dur, skew)
 
     def busy_tick(self) -> int:
         if not self.uplinks:

@@ -48,6 +48,8 @@ from __future__ import annotations
 import heapq
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import trace as dbg
+
 
 class TimingModel:
     """How issued ops turn into completion ticks (one instance per
@@ -201,6 +203,11 @@ class AtomicTiming(TimingModel):
     def _arrive(self, ex, payload):
         from repro.core.desim.simnodes import to_ticks
         key = payload["op_idx"]
+        if dbg._ACTIVE:
+            # atomic dcn arrivals bypass DcnSim._on_arrive, so trace here
+            dbg.dprintf("Dcn", "atomic", "%s op=%d arrive pod=%d",
+                        payload.get("name", payload.get("kind", "dcn")),
+                        key, payload.get("pod", -1), tick=payload["ready"])
         r = self._rendezvous.setdefault(
             key, {"first": payload["ready"], "last": 0, "waiters": []})
         r["first"] = min(r["first"], payload["ready"])

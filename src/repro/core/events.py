@@ -244,6 +244,11 @@ class QuantumSync:
         self.quantum = int(quantum)
         self.barriers = 0
         self._pending: list[tuple[int, EventQueue, Callable[[], None]]] = []
+        #: read-only observer called as ``observer(t, delivered)`` after
+        #: each barrier step (instrumentation: Quantum DPRINTF, Perfetto
+        #: barrier track).  Must not mutate queues — it runs after every
+        #: queue has reached ``t``, so a pure read cannot perturb.
+        self.observer: Optional[Callable[[int, int], None]] = None
 
     @property
     def pending_messages(self) -> int:
@@ -266,6 +271,8 @@ class QuantumSync:
         for q in self.queues:
             q.run_until(t)
         self.barriers += 1
+        if self.observer is not None:
+            self.observer(t, len(due))
 
     def run(self, max_tick: int) -> int:
         """Run all queues to ``max_tick`` in lockstep quanta.

@@ -9,11 +9,20 @@ Simulation"):
 * :mod:`repro.sim.boards` — prebuilt machines (``v5e_pod()``, ...).
 * :mod:`repro.sim.serialize` — drain-then-serialize checkpoints.
 * :mod:`repro.sim.sampling` — SimPoint/SMARTS sampled simulation.
+* :mod:`repro.sim.instrument` — m5out-style output dirs, gem5-format
+  stats dumps, Perfetto trace export, host telemetry (with the debug
+  flag/DPRINTF layer in :mod:`repro.core.trace`).
 """
 
+from repro.core.trace import (disable as disable_debug_flags,
+                              enable as enable_debug_flags,
+                              flag_context, flags as debug_flags)
 from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
                               v5e_multipod, v5e_pod, v5e_serving,
                               v5e_straggler, v5e_unreliable)
+from repro.sim.instrument import (OutDir, TraceEventRecorder,
+                                  format_host_banner, host_record,
+                                  render_stats_txt, validate_trace_events)
 from repro.sim.parallel import (ParallelEngine, merge_stat_trees,
                                 parallel_supported, run_parallel)
 from repro.sim.sampling import (SampledResult, SampledSimulation,
@@ -46,4 +55,8 @@ __all__ = [
     "restore_executor", "machine_from_dict",
     "ParallelEngine", "run_parallel", "parallel_supported",
     "merge_stat_trees",
+    "OutDir", "TraceEventRecorder", "render_stats_txt", "host_record",
+    "format_host_banner", "validate_trace_events",
+    "enable_debug_flags", "disable_debug_flags", "debug_flags",
+    "flag_context",
 ]

@@ -58,14 +58,17 @@ from __future__ import annotations
 
 import enum
 import os
+import time
 from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
+from repro.core import trace as dbg
 from repro.core.desim.executor import ExecResult, TraceExecutor
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import TICKS_PER_S
 from repro.core.desim.trace import HloTrace
+from repro.sim import instrument as inst
 from repro.sim.boards import Board
 from repro.sim.workloads import DynamicWorkload
 
@@ -79,6 +82,7 @@ class ExitEventType(enum.Enum):
     SLO_VIOLATION = "slo_violation"
     POD_FAILED = "pod_failed"
     RESHARD = "reshard"
+    STAT_DUMP = "stat_dump"
     DONE = "done"
 
 
@@ -177,7 +181,9 @@ class Simulator:
                  record_stats: bool = True, record_timeline: bool = False,
                  contention: Optional[bool] = None,
                  timing: Optional[str] = None,
-                 workers: int = 1, mp_context: Optional[str] = None):
+                 workers: int = 1, mp_context: Optional[str] = None,
+                 outdir: Optional[str] = None, trace_events: bool = False,
+                 verbose: bool = False):
         if isinstance(board, ClusterModel):
             board = Board(machine=board)
         self.board = board.instantiate()     # Simulator owns instantiate()
@@ -192,11 +198,25 @@ class Simulator:
                            else workload.trace())
         if self._dyn is not None:
             workers = 1        # co-simulation is inherently in-process
+        # m5out-style instrumentation (repro.sim.instrument): the
+        # recorder rides _ex_cfg so every executor this Simulator builds
+        # (initial, checkpoint restores, parallel spawns) records into
+        # the same merged timeline
+        self.outdir = inst.OutDir(outdir) if outdir else None
+        self._recorder = (inst.TraceEventRecorder() if trace_events
+                          else None)
+        self.verbose = bool(verbose)
+        self._host_t0: Optional[float] = None
+        self._host_seconds = 0.0
+        self._final_tick: Optional[int] = None
+        self._stat_dump_period: Optional[int] = None
+        self._stat_dump_reset = False
         self._ex_cfg = dict(record_stats=record_stats,
                             record_timeline=record_timeline,
                             contention=contention, timing=timing,
                             workers=int(workers or 1),
-                            mp_context=mp_context)
+                            mp_context=mp_context,
+                            instrument=self._recorder)
         self._ex = board.executor(**self._ex_cfg)
         # pin the resolved model: checkpoints/switches restore under it
         self._ex_cfg["timing"] = self._ex.timing.name
@@ -213,6 +233,10 @@ class Simulator:
         self.checkpoint_dir = checkpoint_dir
         self.last_checkpoint: Optional[Dict[str, Any]] = None
         self.checkpoint_paths: List[str] = []
+        if self.outdir is not None:
+            # gem5 writes config.json/config.ini at instantiate time:
+            # the run's full configuration as a versioned artifact
+            self.outdir.write_config(self._config_doc())
 
     # -- construction from a checkpoint ---------------------------------
     @classmethod
@@ -220,7 +244,10 @@ class Simulator:
                         workload=None, timing: Optional[str] = None,
                         checkpoint_dir: Optional[str] = None,
                         workers: int = 1,
-                        mp_context: Optional[str] = None) -> "Simulator":
+                        mp_context: Optional[str] = None,
+                        outdir: Optional[str] = None,
+                        trace_events: bool = False,
+                        verbose: bool = False) -> "Simulator":
         """Resume a serialized simulation, optionally onto a
         re-parameterized ``board`` (the checkpoint-once, sweep-hardware
         workflow).  ``source`` is a path or a checkpoint dict.
@@ -273,7 +300,9 @@ class Simulator:
                   contention=(None if timing is not None
                               or cfg.get("timing") is not None
                               else cfg.get("contention")),
-                  workers=workers, mp_context=mp_context)
+                  workers=workers, mp_context=mp_context,
+                  outdir=outdir, trace_events=trace_events,
+                  verbose=verbose)
         overrides = dict(sim._ex_cfg)
         if explicit_board:
             # an explicitly-passed board wins wholesale: it bundles the
@@ -307,6 +336,21 @@ class Simulator:
         """Drain + serialize at the first pause point >= ``tick`` and
         yield ``CHECKPOINT`` (gem5 checkpoint exit event)."""
         self._schedule(tick, ExitEventType.CHECKPOINT)
+
+    def schedule_stat_dump(self, period: int, reset: bool = False) -> None:
+        """Dump statistics every ``period`` ticks (gem5
+        ``m5.stats.periodicStatDump``): the run pauses at each cadence
+        point exactly like a ``schedule_max_tick`` (so the dump cannot
+        perturb event order), renders a ``stats.txt`` section to the
+        outdir (or just yields ``STAT_DUMP`` when there is none), and
+        reschedules.  ``reset=True`` also zeroes the stats after each
+        dump (per-interval sections, gem5's dump-and-reset)."""
+        period = int(period)
+        if period <= 0:
+            raise ValueError("stat-dump period must be positive")
+        self._stat_dump_period = period
+        self._stat_dump_reset = bool(reset)
+        self._schedule(self._ex.now + period, ExitEventType.STAT_DUMP)
 
     # -- internals --------------------------------------------------------
     def _install_hook(self) -> None:
@@ -363,6 +407,8 @@ class Simulator:
                                   "drained_tick": ckpt["tick"]})
 
     def _ensure_started(self) -> None:
+        if self._host_t0 is None:
+            self._host_t0 = time.perf_counter()
         if not self._started:
             self._ex.begin(self._trace)
             self._install_hook()
@@ -375,7 +421,7 @@ class Simulator:
         return self._ex.done() and (self._dyn is None or self._dyn.done())
 
     # -- the exit-event loop ----------------------------------------------
-    def run(self) -> Iterator[ExitEvent]:
+    def run(self, verbose: Optional[bool] = None) -> Iterator[ExitEvent]:
         """Generator of :class:`ExitEvent`s; drive multi-phase
         simulations by iterating (and scheduling further exits between
         yields).
@@ -385,7 +431,41 @@ class Simulator:
         then ``poll`` lets the workload inject ops before the engine
         continues.  Workload-raised exits (SLO violations) yield like
         any other exit event.
+
+        ``verbose`` (default: the constructor's ``verbose`` knob) prints
+        the gem5 exit banner — ``Exiting @ tick N because <reason>`` —
+        for every yielded event, plus the host-performance line
+        (simSeconds/hostSeconds/simRate) at DONE.  Nothing is printed
+        otherwise: all narration goes through the DPRINTF layer
+        (``repro.core.trace``), so stdout stays silent unless a debug
+        flag or the verbosity knob is explicitly enabled.
         """
+        v = self.verbose if verbose is None else bool(verbose)
+        for ev in self._run_events():
+            dbg.dprintf("Sim", "simulator", "exiting because %s",
+                        ev.cause, tick=ev.tick)
+            if ev.kind is ExitEventType.DONE:
+                self._finalize(ev)
+            if v:
+                print(f"Exiting @ tick {ev.tick} because {ev.cause}")
+                if ev.kind is ExitEventType.DONE:
+                    print(inst.format_host_banner(self.host_record()))
+            yield ev
+
+    def _finalize(self, done_ev: ExitEvent) -> None:
+        """Close out the run's artifacts at DONE: host clock, final
+        stats section, telemetry record, Perfetto trace."""
+        if self._host_t0 is not None:
+            self._host_seconds = time.perf_counter() - self._host_t0
+        self._final_tick = done_ev.tick
+        if self.outdir is not None:
+            self.dump_stats(reason="final")
+            self.outdir.write_json(inst.OutDir.TELEMETRY,
+                                   self.host_record())
+            if self._recorder is not None:
+                self.write_trace()
+
+    def _run_events(self) -> Iterator[ExitEvent]:
         self._ensure_started()
         stop = (self._stop_check
                 if self._has_markers or self._dyn is not None else None)
@@ -438,6 +518,14 @@ class Simulator:
                 self._scheduled.pop(0)
                 if kind is ExitEventType.CHECKPOINT:
                     yield self._do_checkpoint(tick)
+                elif kind is ExitEventType.STAT_DUMP:
+                    self.dump_stats(reason=f"periodic @ tick {tick}")
+                    if self._stat_dump_reset:
+                        self.reset_stats()
+                    if self._stat_dump_period:
+                        self._schedule(tick + self._stat_dump_period,
+                                       ExitEventType.STAT_DUMP)
+                    yield ExitEvent(kind, tick=tick, cause="stat dump")
                 else:
                     yield ExitEvent(kind, tick=tick, cause="max tick")
             else:
@@ -456,9 +544,10 @@ class Simulator:
                     self._ex.result()        # raises the deadlock error
         # not reached
 
-    def run_to_completion(self) -> ExecResult:
+    def run_to_completion(self,
+                          verbose: Optional[bool] = None) -> ExecResult:
         """Drain every exit event and return the final ExecResult."""
-        for _ in self.run():
+        for _ in self.run(verbose=verbose):
             pass
         return self.result()
 
@@ -507,6 +596,95 @@ class Simulator:
             raise RuntimeError("simulation has not completed; iterate "
                                "run() until DONE (or run_to_completion())")
         return self._result
+
+    # -- observability (repro.sim.instrument) -----------------------------
+    def _stat_groups(self) -> List[Any]:
+        groups = []
+        if self._ex.sim_root is not None:
+            groups.append(self._ex.sim_root.stats)
+        dyn_stats = getattr(self._dyn, "stats", None)
+        if dyn_stats is not None:
+            groups.append(dyn_stats)
+        return groups
+
+    def dump_stats(self, reason: str = "manual") -> str:
+        """Render one gem5-format stats section (engine tree + dynamic-
+        workload tree) — appended to ``<outdir>/stats.txt`` when the
+        Simulator owns an outdir, returned either way.  Callable at any
+        exit event, like gem5's ``m5.stats.dump()``."""
+        self._ensure_started()
+        now = self._ex.now
+        extra = {"simTicks": now, "simSeconds": now / TICKS_PER_S}
+        groups = self._stat_groups()
+        if self.outdir is not None:
+            return self.outdir.dump_stats(groups, extra=extra,
+                                          reason=reason)
+        return inst.render_stats_txt(groups, extra=extra, reason=reason)
+
+    def reset_stats(self) -> None:
+        """Zero every stat (gem5 ``m5.stats.reset()``): subsequent dumps
+        cover only the interval since this call.  Reads of simulation
+        *timing* state are untouched — resetting cannot perturb."""
+        for g in self._stat_groups():
+            g.reset()
+
+    def host_record(self) -> Dict[str, Any]:
+        """The machine-readable exit record (final tick, simSeconds,
+        hostSeconds, simRate, events fired) — gem5's end-of-run banner
+        as data.  Available once the run is DONE."""
+        res = self.result()
+        tick = (self._final_tick if self._final_tick is not None
+                else int(round(res.makespan_s * TICKS_PER_S)))
+        return inst.host_record(tick, self._host_seconds, res.events)
+
+    def write_trace(self, path: Optional[str] = None) -> str:
+        """Write the Perfetto/Chrome trace-event timeline (requires
+        ``trace_events=True``).  Defaults to ``<outdir>/trace.json``;
+        open at https://ui.perfetto.dev.  Under ``workers>1`` the
+        worker lanes merge at result/snapshot collection, so call this
+        after the run (run() does it automatically with an outdir)."""
+        if self._recorder is None:
+            raise RuntimeError("Simulator(trace_events=True) required "
+                               "for write_trace()")
+        if path is None:
+            if self.outdir is None:
+                raise ValueError("no path given and no outdir set")
+            path = self.outdir.file(inst.OutDir.TRACE)
+        return self._recorder.write(path)
+
+    @property
+    def trace_recorder(self):
+        """The live TraceEventRecorder (None without trace_events)."""
+        return self._recorder
+
+    def _config_doc(self) -> Dict[str, Any]:
+        """The run's full configuration as a JSON-able artifact
+        (gem5 ``config.json``: defensible runs dump what they ran)."""
+        ex_cfg = {k: v for k, v in self._ex_cfg.items()
+                  if k != "instrument"}
+        if self._dyn is not None:
+            wl: Dict[str, Any] = {"kind": type(self._dyn).__name__}
+            ser = getattr(self._dyn, "serialize", None)
+            if callable(ser):
+                wl["config"] = ser()
+        else:
+            wl = {"kind": "trace", "name": self._trace.name,
+                  "ops": len(self._trace.ops),
+                  "meta": dict(getattr(self._trace, "meta", {}) or {})}
+        return {
+            "format": "g5x-config",
+            "version": 1,
+            "board": {"name": self.board.name,
+                      "algorithm": self.board.algorithm,
+                      "straggler_slowdowns":
+                          self.board.straggler_slowdowns,
+                      "timing": self.board.timing},
+            "machine": self.board.machine.serialize(),
+            "executor": ex_cfg,
+            "workload": wl,
+            "debug_flags": dbg.enabled_flags(),
+            "trace_events": self._recorder is not None,
+        }
 
     @property
     def tick(self) -> int:

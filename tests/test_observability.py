@@ -1,0 +1,356 @@
+"""Observability layer (PR 7): gem5 DebugFlags/DPRINTF, m5out-style
+output dirs, Perfetto trace export, host telemetry — and, above all,
+the house rule that tracing *observes, never perturbs*: every test that
+turns instrumentation on asserts bit-identity with the bare run
+(results, stats trees, scheduler/policy decision logs, serial and
+workers=4)."""
+
+import io
+import json
+import os
+
+import pytest
+
+from repro.core import trace as dbg
+from repro.core.desim.trace import analytic_trace
+from repro.sim import (ExitEventType, ServingCost, ServeSim, Simulator,
+                       TrainSim, TrainStepCost, poisson_requests,
+                       repeat_trace, v5e_serving, v5e_straggler,
+                       v5e_unreliable, validate_trace_events)
+from repro.sim.instrument import OutDir, format_host_banner
+from repro.configs import get_config
+from repro.train.ft_policy import FailureSchedule, FTPolicy
+
+COLLS = [{"kind": "all-reduce", "bytes": 1e8, "participants": 64}]
+DCN_TAIL = [{"kind": "all-gather", "bytes": 5e7, "participants": 128,
+             "scope": "dcn"}]
+
+
+@pytest.fixture(autouse=True)
+def _clean_debug_state():
+    """Debug flags are process-global: leave no test's flags behind."""
+    yield
+    dbg.disable()
+    dbg.set_output(None)
+
+
+def _board():
+    return v5e_straggler(num_pods=2, nx=4, ny=4)
+
+
+def _trace(steps=4):
+    return repeat_trace(
+        analytic_trace("obs", 3, 1e12, 1e9, COLLS,
+                       tail_collectives=DCN_TAIL), steps)
+
+
+def _fingerprint(sim):
+    res = sim.result()
+    return (res.makespan_s, res.events, sim._ex.sim_root.stats.flat())
+
+
+# ---------------------------------------------------------------------------
+# debug flags + DPRINTF
+# ---------------------------------------------------------------------------
+
+def test_flag_catalog_and_hierarchy():
+    cat = dbg.flags()
+    assert {"Exec", "Chip", "Wire", "Wire.Contention", "Dcn", "Quantum",
+            "Ckpt", "Sim", "Parallel"} <= set(cat)
+    dbg.enable("Wire")                      # parent implies dotted child
+    assert dbg.enabled("Wire") and dbg.enabled("Wire.Contention")
+    dbg.disable()
+    dbg.enable("Wire.Contention")           # child does NOT imply parent
+    assert dbg.enabled("Wire.Contention") and not dbg.enabled("Wire")
+    dbg.disable()
+    dbg.enable("All")
+    assert dbg.enabled("Exec") and dbg.enabled("Dcn")
+
+
+def test_unknown_flag_raises_with_catalog():
+    with pytest.raises(ValueError, match="Exec"):
+        dbg.enable("NoSuchFlag")
+
+
+def test_env_selection():
+    got = dbg.init_from_env({"G5X_DEBUG_FLAGS": "Exec, Dcn"})
+    assert set(got) == {"Exec", "Dcn"}
+    assert dbg.enabled("Exec") and not dbg.enabled("Wire")
+    dbg.disable()
+    assert dbg.init_from_env({}) == []      # no env var: nothing enabled
+
+
+def test_dprintf_format_and_sink():
+    buf = io.StringIO()
+    dbg.set_output(buf)
+    dbg.enable("Exec")
+
+    class Obj:
+        name = "pod0.chip"
+    dbg.dprintf("Exec", Obj(), "issue op=%d kind=%s", 3, "compute",
+                tick=1234)
+    assert buf.getvalue() == "      1234: pod0.chip: issue op=3 kind=compute\n"
+    buf.truncate(0), buf.seek(0)
+    dbg.dprintf("Exec", None, "bare", tick=0)
+    assert buf.getvalue() == "         0: -: bare\n"
+
+
+def test_dprintf_disabled_never_formats():
+    class Exploding:
+        def __repr__(self):
+            raise AssertionError("formatted while disabled")
+        __str__ = __repr__
+
+    buf = io.StringIO()
+    dbg.set_output(buf)
+    dbg.dprintf("Exec", None, "boom %s", Exploding(), tick=1)  # no flags on
+    dbg.enable("Dcn")                                          # wrong flag
+    dbg.dprintf("Exec", None, "boom %s", Exploding(), tick=1)
+    assert buf.getvalue() == ""
+
+
+def test_counting_mode_counts_suppressed_calls():
+    with dbg.counting():
+        dbg.dprintf("Exec", None, "a")
+        dbg.dprintf("Dcn", None, "b")
+        assert dbg.suppressed_calls() == 2
+    assert not dbg._ACTIVE                  # counting mode fully unwinds
+
+
+def test_flag_context_restores_previous_set():
+    dbg.enable("Sim")
+    with dbg.flag_context("Exec,Dcn"):
+        assert dbg.enabled("Exec") and dbg.enabled("Sim")
+    assert dbg.enabled("Sim") and not dbg.enabled("Exec")
+
+
+# ---------------------------------------------------------------------------
+# the house rule: tracing observes, never perturbs
+# ---------------------------------------------------------------------------
+
+def test_full_instrumentation_is_bit_identical_serial(tmp_path):
+    bare = Simulator(_board(), _trace())
+    bare.run_to_completion()
+
+    dbg.enable("All")
+    dbg.set_output(io.StringIO())
+    sim = Simulator(_board(), _trace(), outdir=str(tmp_path),
+                    trace_events=True)
+    sim.schedule_stat_dump(5_000_000)       # periodic dumps every 5ms
+    sim.run_to_completion()
+
+    assert _fingerprint(sim) == _fingerprint(bare)
+    assert sim.outdir.dumps > 1             # periodic + final really fired
+
+
+def test_full_instrumentation_is_bit_identical_workers4(tmp_path):
+    board = v5e_straggler(num_pods=4, nx=4, ny=4)
+    bare = Simulator(board, _trace())
+    bare.run_to_completion()
+
+    dbg.enable("All")
+    dbg.set_output(io.StringIO())
+    sim = Simulator(board, _trace(), workers=4, outdir=str(tmp_path),
+                    trace_events=True)
+    sim.run_to_completion()
+    assert _fingerprint(sim) == _fingerprint(bare)
+
+
+def test_servesim_decisions_unperturbed(tmp_path):
+    reqs = poisson_requests(30, 300.0, seed=4, decode_len=(4, 16))
+    cost = ServingCost.from_params(7e9, layers=32, d_model=4096, chips=64)
+
+    def lap(**kw):
+        srv = ServeSim(cost=cost, requests=reqs, slots=4,
+                       seq_capacity=1024)
+        sim = Simulator(v5e_serving(8, 8), srv, **kw)
+        sim.run_to_completion()
+        return srv, sim
+
+    s0, sim0 = lap()
+    dbg.enable("All")
+    dbg.set_output(io.StringIO())
+    s1, sim1 = lap(outdir=str(tmp_path), trace_events=True)
+    assert s1.schedulers[0].decisions == s0.schedulers[0].decisions
+    assert s1.summary() == s0.summary()
+    assert sim1.result().makespan_s == sim0.result().makespan_s
+
+
+def test_trainsim_decisions_unperturbed(tmp_path):
+    pods, chips = 4, 16
+    sched = FailureSchedule.generate(seed=7, horizon=100, pods=pods,
+                                     mtbf=40.0, straggler_mtbs=60.0,
+                                     preemption_mtbs=150.0,
+                                     repair=(10, 40))
+    cost = TrainStepCost.from_params(1e9, tokens_per_batch=100_000,
+                                     chips=pods * chips)
+
+    def lap(**kw):
+        pol = FTPolicy(get_config("deepseek-67b"), num_steps=30,
+                       ckpt_interval=10, pods=pods, chips_per_pod=chips)
+        ts = TrainSim(cost=cost, policy=pol, schedule=sched)
+        sim = Simulator(v5e_unreliable(pods, seed=0, mtbf=0.0,
+                                       nx=4, ny=4), ts, **kw)
+        sim.run_to_completion()
+        return pol, sim
+
+    p0, sim0 = lap()
+    dbg.enable("All")
+    dbg.set_output(io.StringIO())
+    p1, sim1 = lap(outdir=str(tmp_path), trace_events=True)
+    assert p1.decisions == p0.decisions
+    assert sim1.result().makespan_s == sim0.result().makespan_s
+
+
+def test_no_stdout_with_flags_disabled(capsys):
+    sim = Simulator(_board(), _trace())
+    sim.run_to_completion()
+    assert capsys.readouterr().out == ""    # nothing ad hoc on stdout
+
+
+# ---------------------------------------------------------------------------
+# m5out-style output dir
+# ---------------------------------------------------------------------------
+
+def test_outdir_layout_and_stats_sections(tmp_path):
+    d = str(tmp_path / "m5out")
+    sim = Simulator(_board(), _trace(), outdir=d, trace_events=True)
+    sim.dump_stats(reason="warm")           # manual dump mid-stream
+    sim.run_to_completion()                 # final dump + telemetry + trace
+
+    assert sorted(os.listdir(d)) == ["config.json", "stats.txt",
+                                     "telemetry.json", "trace.json"]
+    text = open(os.path.join(d, "stats.txt")).read()
+    assert text.count("Begin Simulation Statistics") == 2
+    assert text.count("End Simulation Statistics") == 2
+    assert "// final" in text
+    assert "simTicks" in text and "simSeconds" in text
+
+    cfg = json.load(open(os.path.join(d, "config.json")))
+    assert cfg["board"]["name"].startswith("v5e")
+    assert cfg["machine"]["class"] == "ClusterModel"
+    assert cfg["machine"]["params"]["num_pods"] == 2
+    assert cfg["workload"]["kind"] == "trace"
+    assert "timing" in cfg["executor"]
+
+    tel = json.load(open(os.path.join(d, "telemetry.json")))
+    assert tel["final_tick"] == round(
+        sim.result().makespan_s * 1_000_000_000)
+    assert tel["events"] == sim.result().events
+    assert tel["host_seconds"] > 0 and tel["sim_rate"] > 0
+    assert "simSeconds" in format_host_banner(tel)
+    assert "simRate" in format_host_banner(tel)
+
+
+def test_periodic_stat_dump_exit_events_and_reset(tmp_path):
+    d = str(tmp_path / "m5out")
+    sim = Simulator(_board(), _trace(steps=6), outdir=d)
+    sim.schedule_stat_dump(10_000_000, reset=True)
+    kinds = [ev.kind for ev in sim.run()]
+    assert ExitEventType.STAT_DUMP in kinds
+    assert kinds[-1] == ExitEventType.DONE
+    n_dumps = kinds.count(ExitEventType.STAT_DUMP)
+    text = open(os.path.join(d, "stats.txt")).read()
+    assert text.count("Begin Simulation Statistics") == n_dumps + 1
+    # reset=True: later sections cover intervals, so per-pod op counts
+    # in the final section are below the full-run total
+    assert sim.outdir.dumps == n_dumps + 1
+
+
+def test_reset_stats_zeroes_tree():
+    sim = Simulator(_board(), _trace())
+    sim.run_to_completion()
+    flat = sim._ex.sim_root.stats.flat()
+    assert any(v for v in flat.values() if isinstance(v, (int, float)) and v)
+    sim.reset_stats()
+    flat2 = sim._ex.sim_root.stats.flat()
+    assert all(not v for v in flat2.values()
+               if isinstance(v, (int, float)))
+
+
+# ---------------------------------------------------------------------------
+# exit banner + host telemetry
+# ---------------------------------------------------------------------------
+
+def test_exit_banner_behind_verbosity_knob(capsys):
+    sim = Simulator(_board(), _trace())
+    sim.run_to_completion(verbose=True)
+    out = capsys.readouterr().out
+    assert "Exiting @ tick" in out and "because workload complete" in out
+    assert "simSeconds" in out and "simRate" in out   # gem5-style banner
+
+    sim2 = Simulator(_board(), _trace())
+    sim2.run_to_completion()                # default: silent
+    assert capsys.readouterr().out == ""
+
+
+def test_host_record_fields():
+    sim = Simulator(_board(), _trace())
+    sim.run_to_completion()
+    rec = sim.host_record()
+    assert set(rec) == {"final_tick", "sim_seconds", "host_seconds",
+                        "sim_rate", "events", "events_per_host_sec"}
+    assert rec["sim_seconds"] == pytest.approx(sim.result().makespan_s)
+    assert rec["events"] == sim.result().events
+
+
+# ---------------------------------------------------------------------------
+# Perfetto / Chrome trace-event export
+# ---------------------------------------------------------------------------
+
+def test_trace_schema_and_tracks_serial(tmp_path):
+    d = str(tmp_path / "m5out")
+    sim = Simulator(_board(), _trace(), outdir=d, trace_events=True)
+    sim.run_to_completion()
+    doc = json.load(open(os.path.join(d, "trace.json")))
+    assert validate_trace_events(doc) == []
+    evs = doc["traceEvents"]
+    tnames = {e["args"]["name"] for e in evs
+              if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert {"pod0/compute", "pod0/ici+dcn", "pod1/compute",
+            "quantum barriers", "dcn transactions"} <= tnames
+    assert any(e.get("ph") == "X" for e in evs)        # op slices
+    assert any(e.get("ph") == "i" for e in evs)        # barrier instants
+    assert any(e.get("ph") == "s" for e in evs)        # dcn flows
+
+
+def test_trace_merges_worker_lanes(tmp_path):
+    d = str(tmp_path / "m5out")
+    board = v5e_straggler(num_pods=4, nx=4, ny=4)
+    sim = Simulator(board, _trace(), workers=4, outdir=d,
+                    trace_events=True)
+    sim.run_to_completion()
+    doc = json.load(open(os.path.join(d, "trace.json")))
+    assert validate_trace_events(doc) == []
+    pnames = {e["args"]["name"] for e in doc["traceEvents"]
+              if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"worker0 (pods 0..0)", "worker3 (pods 3..3)",
+            "coordinator (dcn + quantum)"} <= pnames
+    # every pod shows up as a lane in some worker process
+    tnames = {e["args"]["name"] for e in doc["traceEvents"]
+              if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert {f"pod{p}/compute" for p in range(4)} <= tnames
+    # dcn rendezvous arrive on the coordinator's transaction track
+    coord_x = [e for e in doc["traceEvents"]
+               if e.get("ph") == "X" and e["pid"] == 2]
+    assert coord_x and all(e["tid"] == 0 for e in coord_x)
+
+
+def test_validate_trace_events_catches_malformed():
+    bad = {"traceEvents": [{"ph": "X", "name": "op"}]}   # no ts/dur/pid/tid
+    assert validate_trace_events(bad)
+    good = {"traceEvents": [{"ph": "X", "name": "op", "ts": 0.0,
+                             "dur": 1.0, "pid": 1, "tid": 1}]}
+    assert validate_trace_events(good) == []
+
+
+def test_write_trace_requires_recorder(tmp_path):
+    sim = Simulator(_board(), _trace())
+    sim.run_to_completion()
+    with pytest.raises(RuntimeError, match="trace_events"):
+        sim.write_trace(str(tmp_path / "t.json"))
+
+
+def test_outdir_constant_names():
+    assert (OutDir.STATS, OutDir.CONFIG, OutDir.TELEMETRY, OutDir.TRACE) \
+        == ("stats.txt", "config.json", "telemetry.json", "trace.json")

@@ -30,6 +30,12 @@
 #                            # workload AND bit-exact (full ExecResult
 #                            # + stats-tree equality) — fails loudly if
 #                            # pod sharding / clone folding regresses
+#   tools/ci.sh trace        # observability tier: fully-instrumented
+#                            # smoke lap (m5out stats.txt/config.json +
+#                            # Perfetto trace, serial and workers=4),
+#                            # validates the trace-event JSON schema,
+#                            # asserts bit-identity with the bare lap
+#                            # and < 5% flags-disabled DPRINTF overhead
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -49,6 +55,12 @@ if [ "${1-}" = "parallel" ]; then
   shift
   python -m benchmarks.distgem5_scaling --assert-parallel 2
   echo "parallel tier OK"
+  exit 0
+fi
+if [ "${1-}" = "trace" ]; then
+  shift
+  python -m benchmarks.observability --assert-overhead 5
+  echo "trace tier OK"
   exit 0
 fi
 if [ "${1-}" = "smoke" ]; then
