@@ -20,6 +20,13 @@ def rows_as_dict() -> Dict[str, Dict[str, object]]:
             for name, us, derived in ROWS}
 
 
+def fmt_ms(x: float) -> str:
+    """Render a seconds value as milliseconds — ``n/a`` for NaN (an
+    empty percentile sketch: zero finished requests), never a fake
+    0.00ms."""
+    return "n/a" if x != x else f"{x * 1e3:.2f}ms"
+
+
 def fidelity_from_argv(argv: List[str]) -> str:
     """Parse the sweeps' shared ``--fidelity {atomic,detailed}`` flag
     (default: atomic — the fast outer-sweep model)."""

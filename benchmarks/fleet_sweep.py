@@ -1,0 +1,217 @@
+"""Fleet DSE sweep: fleet size x router policy x traffic model ->
+goodput / p99-TTFT / scale-event frontier (the autoscaled layer above
+serving_sweep).
+
+The gem5 full-system promise at datacenter scale: every cell runs the
+FleetSim co-simulation — continuous-batching replicas behind the pure
+``FleetPolicy`` router+autoscaler — over one *seeded* traffic stream,
+so rows are reproducible and comparable across policies and fleet
+shapes.  Three axes:
+
+* **router** — round_robin / least_loaded / p2c / prefix_affinity on
+  the flash-crowd stream with the autoscaler live;
+* **fleet size** — max_replicas 2 (a fixed fleet: the floor equals the
+  ceiling) / 4 / 6 under least_loaded;
+* **traffic** — the flash crowd vs. a diurnal curve (lognormal lengths
+  and two tenant classes in both).
+
+The **recovery row** is the headline claim: after the crowd passes,
+the autoscaled fleet is back in SLO compliance while the fixed-size
+fleet — identical except ``max_replicas == min_replicas`` — provably
+is not (still churning through backlog).  The row *asserts* this, like
+serving_sweep's fidelity spot-check asserts exactness.
+
+``--fidelity {atomic,detailed}`` picks the timing model (default:
+atomic — exact for fleets, whose injected ops are per-pod compute); one
+cell re-runs detailed as a spot-check.  ``--assert-fleet`` is the
+``tools/ci.sh fleet`` tier: a short flash-crowd lap run twice,
+asserting the autoscaler scales up, SLO recovers, and the lap —
+decision log and summary — is bit-identical across runs.
+
+Emits one row per cell:
+  fleet_sweep/<axis>/<cell> , wall_us , goodput/p99-ttft/scale events
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+import time
+
+from benchmarks.common import emit, fidelity_from_argv, fmt_ms
+from repro.core.desim.simnodes import to_ticks
+from repro.serve.fleet_policy import FleetPolicy
+from repro.sim import (FleetSim, ServingCost, Simulator, diurnal_requests,
+                       flash_crowd_requests, v5e_fleet)
+
+SEED = 7
+NUM_REQUESTS = 420
+BASE_RPS = 15.0
+CROWD_RPS = 90.0
+CROWD_START_S = 2.0
+CROWD_LEN_S = 3.0
+POST_CROWD_S = 8.0       # compliance window: requests submitted after
+SLOTS = 8
+MIN_REPLICAS = 2
+MAX_REPLICAS = 6
+COLD_START_S = 1.0
+CONTROL_PERIOD_S = 0.5
+SLO_TTFT_S = 0.6
+SLO_LATENCY_S = 4.0
+TENANT_SLO = {"batch": 4.0}      # batch tenants get 4x relaxed SLOs
+
+# a 70B-class model on 4x4 replica slices (16 chips each)
+MODEL = dict(num_params=70e9, layers=80, d_model=8192)
+REPLICA_NX = REPLICA_NY = 4
+
+
+def _flash(num: int = NUM_REQUESTS):
+    return flash_crowd_requests(
+        num, seed=SEED, base_rps=BASE_RPS, crowd_rps=CROWD_RPS,
+        crowd_start_s=CROWD_START_S, crowd_len_s=CROWD_LEN_S,
+        prefix_groups=8)
+
+
+def _diurnal(num: int = NUM_REQUESTS):
+    return diurnal_requests(num, seed=SEED, base_rps=BASE_RPS,
+                            peak_rps=CROWD_RPS, period_s=10.0,
+                            prefix_groups=8)
+
+
+def _lap(requests, *, router: str = "least_loaded",
+         min_replicas: int = MIN_REPLICAS,
+         max_replicas: int = MAX_REPLICAS, timing: str = "atomic"):
+    board = v5e_fleet(max_replicas=max_replicas, nx=REPLICA_NX,
+                      ny=REPLICA_NY)
+    cost = ServingCost.from_params(
+        chips=REPLICA_NX * REPLICA_NY, **MODEL)
+    policy = FleetPolicy(router, min_replicas=min_replicas,
+                         max_replicas=max_replicas,
+                         slots_per_replica=SLOTS,
+                         cold_start_ticks=to_ticks(COLD_START_S),
+                         control_period_ticks=to_ticks(CONTROL_PERIOD_S),
+                         seed=SEED)
+    fleet = FleetSim(cost=cost, requests=requests, policy=policy,
+                     seq_capacity=1024, slo_ttft_s=SLO_TTFT_S,
+                     slo_latency_s=SLO_LATENCY_S, tenant_slo=TENANT_SLO)
+    sim = Simulator(board, fleet, timing=timing)
+    t0 = time.perf_counter()
+    sim.run_to_completion()
+    return (time.perf_counter() - t0) * 1e6, fleet
+
+
+def _derived(s) -> str:
+    return (f"goodput={s['goodput_rps']:.1f}rps "
+            f"thru={s['throughput_rps']:.1f}rps "
+            f"viol={int(s['slo_violations'])} "
+            f"p99_ttft={fmt_ms(s['p99_ttft_s'])} "
+            f"ups={int(s['scale_ups'])} downs={int(s['scale_downs'])} "
+            f"peak={int(s['replicas_peak'])}")
+
+
+def recovery_lap(timing: str = "atomic"):
+    """The headline pair: autoscaled vs fixed fleet on the same
+    seeded flash crowd.  Returns (auto FleetSim, fixed FleetSim,
+    auto wall us, fixed wall us)."""
+    wall_a, auto = _lap(_flash(), router="p2c")
+    wall_f, fixed = _lap(_flash(), router="p2c",
+                         max_replicas=MIN_REPLICAS)
+    return auto, fixed, wall_a, wall_f
+
+
+def check_recovery(auto: FleetSim, fixed: FleetSim) -> None:
+    """Assert the autoscaler claim: it scales up under the crowd and
+    restores post-crowd SLO compliance that the fixed fleet provably
+    cannot."""
+    ok_auto = auto.slo_ok_frac(POST_CROWD_S)
+    ok_fixed = fixed.slo_ok_frac(POST_CROWD_S)
+    if not (auto.summary()["scale_ups"] >= 1):
+        raise RuntimeError("fleet recovery: autoscaler never scaled up")
+    if not (ok_auto >= 0.9):
+        raise RuntimeError(
+            f"fleet recovery: autoscaled post-crowd compliance {ok_auto} "
+            "< 0.9 — the autoscaler no longer restores the SLO")
+    if math.isnan(ok_fixed) or ok_fixed > 0.2:
+        raise RuntimeError(
+            f"fleet recovery: fixed-fleet post-crowd compliance "
+            f"{ok_fixed} > 0.2 — the scenario no longer saturates the "
+            "floor fleet (the comparison is vacuous)")
+
+
+def run(fidelity: str = "atomic") -> None:
+    if fidelity not in ("atomic", "detailed"):
+        raise ValueError(f"--fidelity {fidelity!r}: atomic or detailed")
+    # axis 1: router policy (flash crowd, autoscaler live)
+    for router in ("round_robin", "least_loaded", "p2c",
+                   "prefix_affinity"):
+        wall_us, fleet = _lap(_flash(), router=router, timing=fidelity)
+        emit(f"fleet_sweep/router/{router}", wall_us,
+             _derived(fleet.summary()))
+    # axis 2: fleet ceiling (max_replicas == min is the fixed fleet)
+    for max_replicas in (MIN_REPLICAS, 4, MAX_REPLICAS):
+        wall_us, fleet = _lap(_flash(), max_replicas=max_replicas,
+                              timing=fidelity)
+        emit(f"fleet_sweep/fleet/max{max_replicas}", wall_us,
+             _derived(fleet.summary()))
+    # axis 3: traffic model
+    wall_us, fleet = _lap(_diurnal(), timing=fidelity)
+    emit("fleet_sweep/traffic/diurnal", wall_us,
+         _derived(fleet.summary()))
+    wall_us, fleet = _lap(_diurnal(), router="prefix_affinity",
+                          timing=fidelity)
+    emit("fleet_sweep/traffic/diurnal_affinity", wall_us,
+         _derived(fleet.summary()))
+    # the recovery claim (asserted)
+    auto, fixed, wall_a, wall_f = recovery_lap(fidelity)
+    check_recovery(auto, fixed)
+    emit("fleet_sweep/recovery/flash_crowd", wall_a + wall_f,
+         f"post_crowd_ok auto={auto.slo_ok_frac(POST_CROWD_S):.2f} "
+         f"fixed={fixed.slo_ok_frac(POST_CROWD_S):.2f} "
+         f"ups={int(auto.summary()['scale_ups'])} "
+         f"cold_start={COLD_START_S:.1f}s")
+    if fidelity == "atomic":
+        # detailed spot-check: fleet timing must be fidelity-exact
+        wall_a2, fa = _lap(_flash(num=120), timing="atomic")
+        wall_d, fd = _lap(_flash(num=120), timing="detailed")
+        s_a, s_d = fa.summary(), fd.summary()
+        ok = s_a == s_d and fa.policy.decisions == fd.policy.decisions
+        emit("fleet_sweep/detailed_check", wall_d,
+             f"{'exact-match' if ok else 'MISMATCH'} "
+             f"atomic_wall={wall_a2:.0f}us "
+             f"speedup={wall_d / max(wall_a2, 1e-9):.1f}x")
+        if not ok:
+            raise RuntimeError(
+                "fleet sweep: atomic and detailed laps diverged on the "
+                f"spot-check cell: {s_a} vs {s_d}")
+
+
+def assert_fleet() -> None:
+    """The ``tools/ci.sh fleet`` smoke tier: one short flash-crowd lap,
+    run twice — the autoscaler must scale up, SLO compliance must
+    recover after the crowd (and provably not on the fixed fleet), and
+    the lap must be bit-identical across runs (seed-deterministic
+    decision log and summary)."""
+    auto1, fixed, _, _ = recovery_lap()
+    check_recovery(auto1, fixed)
+    print(f"fleet: scale_ups={int(auto1.summary()['scale_ups'])} "
+          f"post_crowd_ok={auto1.slo_ok_frac(POST_CROWD_S):.2f} "
+          f"(fixed fleet: {fixed.slo_ok_frac(POST_CROWD_S):.2f}) ... PASS")
+    wall2, auto2 = _lap(_flash(), router="p2c")
+    if auto2.policy.decisions != auto1.policy.decisions:
+        raise RuntimeError(
+            "fleet lap is not deterministic: decision logs differ "
+            "between two identical runs")
+    if auto2.summary() != auto1.summary() or auto2.feed != auto1.feed:
+        raise RuntimeError(
+            "fleet lap is not deterministic: summary/feed differ "
+            "between two identical runs")
+    print(f"fleet: lap bit-identical across two runs "
+          f"({len(auto1.policy.decisions)} decisions, "
+          f"{len(auto1.feed)} feed rows) ... PASS")
+
+
+if __name__ == "__main__":
+    if "--assert-fleet" in sys.argv:
+        assert_fleet()
+    else:
+        run(fidelity_from_argv(sys.argv))

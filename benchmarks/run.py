@@ -22,8 +22,9 @@ import traceback
 
 from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
                         distgem5_scaling, elastic_trace, engine_microbench,
-                        fidelity_spectrum, ft_sweep, kernel_throughput,
-                        observability, roofline, sampled_sim, serving_sweep)
+                        fidelity_spectrum, fleet_sweep, ft_sweep,
+                        kernel_throughput, observability, roofline,
+                        sampled_sim, serving_sweep)
 from benchmarks.common import rows_as_dict
 
 BENCHES = [
@@ -35,6 +36,7 @@ BENCHES = [
     ("checkpoint_fork", checkpoint_fork.run),
     ("sampled_sim", sampled_sim.run),
     ("serving_sweep", serving_sweep.run),
+    ("fleet_sweep", fleet_sweep.run),
     ("ft_sweep", ft_sweep.run),
     ("kernel_throughput", kernel_throughput.run),
     ("dse_sweep", dse_sweep.run),
@@ -43,6 +45,33 @@ BENCHES = [
 ]
 
 JSON_PATH = "BENCH_desim.json"
+
+
+def write_json(path: str, rows: dict, pat: str, failed: list) -> int:
+    """Write the perf-trajectory file.  A *filtered* run merges its
+    rows into the existing file (update matching rows, keep the rest)
+    instead of clobbering the committed trajectory down to the subset —
+    the ``tools/ci.sh smoke`` tier runs ``--json fidelity`` and must
+    not erase the other ~100 rows.  An unfiltered run replaces the file
+    wholesale (the full-regeneration semantics, so renamed/retired
+    benchmarks don't linger).  Returns the row count written."""
+    merged = dict(rows)
+    if pat:
+        try:
+            with open(path) as f:
+                existing = json.load(f).get("benchmarks", {})
+        except (OSError, ValueError):
+            existing = {}
+        merged = {**existing, **rows}
+    doc = {
+        "generated_unix": time.time(),
+        "filter": pat,
+        "failed": failed,
+        "benchmarks": merged,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return len(merged)
 
 
 def main() -> None:
@@ -62,16 +91,8 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
     if json_mode:
-        doc = {
-            "generated_unix": time.time(),
-            "filter": pat,
-            "failed": failed,
-            "benchmarks": rows_as_dict(),
-        }
-        with open(JSON_PATH, "w") as f:
-            json.dump(doc, f, indent=1)
-        print(f"wrote {JSON_PATH} ({len(doc['benchmarks'])} rows)",
-              file=sys.stderr)
+        n = write_json(JSON_PATH, rows_as_dict(), pat, failed)
+        print(f"wrote {JSON_PATH} ({n} rows)", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

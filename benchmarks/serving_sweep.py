@@ -23,7 +23,7 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks.common import emit, fidelity_from_argv
+from benchmarks.common import emit, fidelity_from_argv, fmt_ms
 from repro.sim import (ServeSim, ServingCost, Simulator, poisson_requests,
                        v5e_degraded, v5e_serving)
 
@@ -74,8 +74,8 @@ def run(fidelity: str = "atomic") -> None:
                      f"goodput={s['goodput_rps']:.1f}rps "
                      f"thru={s['throughput_rps']:.1f}rps "
                      f"viol={int(s['slo_violations'])} "
-                     f"p99_ttft={s['p99_ttft_s'] * 1e3:.2f}ms "
-                     f"p99_lat={s['p99_latency_s'] * 1e3:.1f}ms "
+                     f"p99_ttft={fmt_ms(s['p99_ttft_s'])} "
+                     f"p99_lat={fmt_ms(s['p99_latency_s'])} "
                      f"batch={s['mean_batch']:.1f}")
     if fidelity == "atomic" and first is not None:
         # detailed spot-check: serving timing must be fidelity-exact

@@ -7,6 +7,9 @@ modules *do* import jax, so they load lazily (PEP 562) on first
 attribute access instead of at package import.
 """
 
+from repro.serve.fleet import FleetController  # noqa: F401 (pure)
+from repro.serve.fleet_policy import (FleetDecision,  # noqa: F401 (pure)
+                                      FleetPolicy)
 from repro.serve.policy import Decision, SlotScheduler  # noqa: F401 (pure)
 
 _LAZY = {
@@ -16,7 +19,8 @@ _LAZY = {
     "build_decode_step": "repro.serve.step",
 }
 
-__all__ = ["Decision", "SlotScheduler", *sorted(_LAZY)]
+__all__ = ["Decision", "SlotScheduler", "FleetPolicy", "FleetDecision",
+           "FleetController", *sorted(_LAZY)]
 
 
 def __getattr__(name):

@@ -18,8 +18,10 @@ from repro.core.trace import (disable as disable_debug_flags,
                               enable as enable_debug_flags,
                               flag_context, flags as debug_flags)
 from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
-                              v5e_multipod, v5e_pod, v5e_serving,
-                              v5e_straggler, v5e_unreliable)
+                              v5e_fleet, v5e_multipod, v5e_pod,
+                              v5e_serving, v5e_straggler, v5e_unreliable)
+from repro.sim.fleet import (FleetRequest, FleetSim, diurnal_requests,
+                             flash_crowd_requests)
 from repro.sim.instrument import (OutDir, TraceEventRecorder,
                                   format_host_banner, host_record,
                                   render_stats_txt, validate_trace_events)
@@ -41,12 +43,15 @@ from repro.sim.workloads import (DynamicWorkload, ServeRequest, ServeSim,
 
 __all__ = [
     "Board", "BOARDS", "get_board", "v5e_pod", "v5e_multipod",
-    "v5e_straggler", "v5e_degraded", "v5e_serving", "v5e_unreliable",
+    "v5e_straggler", "v5e_degraded", "v5e_serving", "v5e_fleet",
+    "v5e_unreliable",
     "Simulator", "ExitEvent", "ExitEventType", "SteadyStateWorkload",
     "repeat_trace",
     "DynamicWorkload", "ServeSim", "ServeRequest", "ServingCost",
     "TrainSim", "TrainStepCost",
     "poisson_requests", "trace_requests", "uniform_requests",
+    "FleetSim", "FleetRequest", "diurnal_requests",
+    "flash_crowd_requests",
     "SamplePlan", "SampledResult", "SampledSimulation", "sampled_run",
     "atomic_step_time_s",
     "CHECKPOINT_VERSION", "WORKLOAD_KEY", "WORKLOAD_KIND_KEY",

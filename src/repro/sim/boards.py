@@ -166,6 +166,19 @@ def v5e_serving(nx: int = 8, ny: int = 8, replicas: int = 1, *,
     return Board(m, timing=timing, name=f"v5e_serving_{replicas}x{nx}x{ny}")
 
 
+def v5e_fleet(max_replicas: int = 8, nx: int = 8, ny: int = 8, *,
+              chip: Optional[Dict] = None,
+              timing: str = "detailed") -> Board:
+    """Autoscaled serving fleet: ``max_replicas`` independent pod
+    slices of ``nx x ny`` chips each — one per replica the
+    ``repro.sim.fleet.FleetSim`` workload's policy may ever bring up
+    (pods above the live fleet sit idle until a scale-up warms them).
+    Quantum 0: replicas never speak DCN, so no quantum model."""
+    m = _cluster("cluster", max_replicas, 0, nx, ny, chip, None, None)
+    return Board(m, timing=timing,
+                 name=f"v5e_fleet_{max_replicas}x{nx}x{ny}")
+
+
 def v5e_unreliable(num_pods: int = 4, *, seed: int = 0,
                    horizon: int = 2000, mtbf: float = 400.0,
                    straggler_mtbs: float = 0.0,
@@ -195,6 +208,7 @@ BOARDS: Dict[str, Callable[..., Board]] = {
     "v5e_straggler": v5e_straggler,
     "v5e_degraded": v5e_degraded,
     "v5e_serving": v5e_serving,
+    "v5e_fleet": v5e_fleet,
     "v5e_unreliable": v5e_unreliable,
 }
 

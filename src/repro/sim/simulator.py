@@ -46,6 +46,10 @@ Exit-event semantics:
                      ``exit_on_fault=True``).
 * ``RESHARD``      — the training workload's FT policy replanned the
                      elastic mesh (after a death or a rejoin).
+* ``SCALE_UP`` / ``SCALE_DOWN`` — the fleet workload's autoscaler
+                     brought a replica up (warming starts; it serves
+                     after its cold start) or retired an idle one
+                     (``repro.sim.fleet.FleetSim``).
 * ``DONE``         — the workload completed; ``result()`` is available.
 
 Dynamic workloads (``repro.sim.workloads.DynamicWorkload``) generate
@@ -82,6 +86,8 @@ class ExitEventType(enum.Enum):
     SLO_VIOLATION = "slo_violation"
     POD_FAILED = "pod_failed"
     RESHARD = "reshard"
+    SCALE_UP = "scale_up"
+    SCALE_DOWN = "scale_down"
     STAT_DUMP = "stat_dump"
     DONE = "done"
 

@@ -473,11 +473,27 @@ class ServeSim(SimObject, DynamicWorkload):
         return [rep.sched for rep in self._reps]
 
     def summary(self) -> Dict[str, float]:
-        """Serving-level result row (the goodput/SLO frontier point)."""
+        """Serving-level result row (the goodput/SLO frontier point).
+
+        ``span_s`` is the active window — first *submitted* request to
+        last finish — not tick 0 to last finish: a trace replayed with
+        an arrival offset (say production logs starting at t=1000 s)
+        must report its real throughput, not one diluted by the idle
+        lead-in.  Percentile keys are NaN when no sample landed, so a
+        zero-finish run can never masquerade as a perfect one.
+        """
         finished = [rt for rt in self._rt.values() if rt["finish"] >= 0]
-        span_s = (max(rt["finish"] for rt in finished) / TICKS_PER_S
-                  if finished else 0.0)
+        if finished:
+            first = min(rt["submit"] for rt in finished)
+            span_s = (max(rt["finish"] for rt in finished)
+                      - first) / TICKS_PER_S
+        else:
+            span_s = 0.0
         ok = sum(1 for rt in finished if rt["ok"])
+
+        def nan_if_empty(stat, value: float) -> float:
+            return value if stat.count else float("nan")
+
         return {
             "requests": float(len(finished)),
             "span_s": span_s,
@@ -485,12 +501,16 @@ class ServeSim(SimObject, DynamicWorkload):
             "goodput_rps": ok / span_s if span_s else 0.0,
             "slo_violations": self.s_slo_viol.value(),
             "tokens_out": self.s_tokens.value(),
-            "p50_ttft_s": self.p_ttft.quantile(0.50),
-            "p99_ttft_s": self.p_ttft.quantile(0.99),
-            "p50_latency_s": self.p_latency.quantile(0.50),
-            "p99_latency_s": self.p_latency.quantile(0.99),
-            "mean_tpot_s": self.p_tpot.mean,
-            "mean_batch": self.d_batch.mean,
+            "p50_ttft_s": nan_if_empty(self.p_ttft,
+                                       self.p_ttft.quantile(0.50)),
+            "p99_ttft_s": nan_if_empty(self.p_ttft,
+                                       self.p_ttft.quantile(0.99)),
+            "p50_latency_s": nan_if_empty(self.p_latency,
+                                          self.p_latency.quantile(0.50)),
+            "p99_latency_s": nan_if_empty(self.p_latency,
+                                          self.p_latency.quantile(0.99)),
+            "mean_tpot_s": nan_if_empty(self.p_tpot, self.p_tpot.mean),
+            "mean_batch": nan_if_empty(self.d_batch, self.d_batch.mean),
         }
 
     # -- checkpointing -----------------------------------------------------

@@ -1,0 +1,61 @@
+"""benchmarks.run --json trajectory file semantics: a *filtered* run
+merges into the committed BENCH_desim.json (update matching rows, keep
+the rest) instead of clobbering it down to the subset; an unfiltered
+run replaces wholesale; the filter is recorded verbatim."""
+
+import json
+
+from benchmarks.run import write_json
+
+
+def _read(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _seed(path, benchmarks, pat=""):
+    write_json(str(path), benchmarks, pat, [])
+
+
+def test_filtered_run_merges_and_keeps_unmatched_rows(tmp_path):
+    path = tmp_path / "bench.json"
+    _seed(path, {"serving_sweep/a": {"us_per_call": 1.0, "derived": "old"},
+                 "fidelity/x": {"us_per_call": 2.0, "derived": "keep"}})
+    n = write_json(str(path),
+                   {"serving_sweep/a": {"us_per_call": 9.0,
+                                        "derived": "new"}},
+                   "serving", [])
+    assert n == 2
+    doc = _read(path)
+    assert doc["benchmarks"]["serving_sweep/a"]["derived"] == "new"
+    assert doc["benchmarks"]["fidelity/x"]["derived"] == "keep"
+    assert doc["filter"] == "serving"          # the pattern, verbatim
+    assert doc["failed"] == []
+
+
+def test_unfiltered_run_replaces_wholesale(tmp_path):
+    path = tmp_path / "bench.json"
+    _seed(path, {"retired/bench": {"us_per_call": 1.0, "derived": ""}})
+    n = write_json(str(path),
+                   {"fresh/bench": {"us_per_call": 3.0, "derived": ""}},
+                   "", [])
+    assert n == 1
+    doc = _read(path)
+    assert set(doc["benchmarks"]) == {"fresh/bench"}   # retired rows gone
+    assert doc["filter"] == ""
+
+
+def test_filtered_run_survives_missing_or_corrupt_existing(tmp_path):
+    missing = tmp_path / "none.json"
+    rows = {"a/b": {"us_per_call": 1.0, "derived": ""}}
+    assert write_json(str(missing), rows, "a", []) == 1
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json")
+    assert write_json(str(corrupt), rows, "a", []) == 1
+    assert set(_read(corrupt)["benchmarks"]) == {"a/b"}
+
+
+def test_failed_benchmarks_are_recorded(tmp_path):
+    path = tmp_path / "bench.json"
+    write_json(str(path), {}, "", ["serving_sweep"])
+    assert _read(path)["failed"] == ["serving_sweep"]

@@ -1,0 +1,249 @@
+"""Pure fleet control plane: deterministic routers, watermark
+autoscaling with first-class cold start, and the checkpointable
+decision log — no event engine, no jax (the FleetSim tentpole's policy
+half)."""
+
+import pytest
+
+from repro.serve.fleet_policy import (DOWN, LIVE, ROUTERS, WARMING,
+                                      FleetDecision, FleetPolicy)
+
+
+def mk(router="least_loaded", **kw):
+    cfg = dict(min_replicas=2, max_replicas=4, slots_per_replica=2,
+               cold_start_ticks=50, control_period_ticks=100, seed=3)
+    cfg.update(kw)
+    return FleetPolicy(router, **cfg)
+
+
+def started(router="least_loaded", **kw):
+    p = mk(router, **kw)
+    p.start()
+    return p
+
+
+# ---------------------------------------------------------------------------
+# construction + lifecycle
+# ---------------------------------------------------------------------------
+
+def test_validation():
+    with pytest.raises(ValueError, match="router"):
+        mk("hash_ring")
+    with pytest.raises(ValueError, match="min_replicas"):
+        mk(min_replicas=5, max_replicas=4)
+    with pytest.raises(ValueError, match="min_replicas"):
+        mk(min_replicas=0)
+    with pytest.raises(ValueError, match="slots"):
+        mk(slots_per_replica=0)
+    with pytest.raises(ValueError, match="control_period"):
+        mk(control_period_ticks=0)
+    with pytest.raises(RuntimeError, match="start"):
+        mk().route(1, 0)
+
+
+def test_start_brings_up_floor_fleet():
+    p = mk()
+    p.start()
+    p.start()                       # idempotent
+    assert p.live_replicas() == [0, 1]
+    assert p.serving_replicas() == [0, 1]
+    assert p.state(2) == DOWN
+    assert [d.to_row() for d in p.decisions] == [
+        ["replica_up", 0, -1, 0, "initial"],
+        ["replica_up", 0, -1, 1, "initial"]]
+
+
+def test_decision_row_round_trip():
+    d = FleetDecision("scale_up", 17, rid=3, replica=2, note="queue 9/8")
+    assert FleetDecision.from_row(d.to_row()) == d
+
+
+# ---------------------------------------------------------------------------
+# routers
+# ---------------------------------------------------------------------------
+
+def test_round_robin_cycles_serving_set():
+    p = started("round_robin", min_replicas=3, max_replicas=3)
+    assert [p.route(1, rid) for rid in range(5)] == [0, 1, 2, 0, 1]
+
+
+def test_least_loaded_prefers_fewest_outstanding_then_lowest_id():
+    p = started()
+    assert p.route(1, 0) == 0
+    assert p.route(1, 1) == 1
+    assert p.route(1, 2) == 0       # tie on load -> lowest id
+    p.finish(2, 1)
+    assert p.route(3, 3) == 1       # replica 1 is now the lightest
+
+
+def test_p2c_is_seed_deterministic_and_stays_on_serving_set():
+    a = started("p2c", min_replicas=3, max_replicas=3)
+    b = started("p2c", min_replicas=3, max_replicas=3)
+    routes = [a.route(1, rid) for rid in range(20)]
+    assert routes == [b.route(1, rid) for rid in range(20)]
+    assert set(routes) <= {0, 1, 2}
+    assert a.decisions == b.decisions
+
+
+def test_prefix_affinity_sticks_until_overloaded():
+    # overload threshold = affinity_overload * slots = 2.0 * 2 = 4
+    p = started("prefix_affinity", min_replicas=3, max_replicas=3)
+    home = p.route(1, 0, prefix=7)
+    assert home == 0                # first of the group homes least-loaded
+    for rid in (1, 2, 3):
+        assert p.route(1, rid, prefix=7) == home
+    # home now holds 4 outstanding: the next group member spills and
+    # the group re-homes to the spill target
+    spill = p.route(1, 4, prefix=7)
+    assert spill != home
+    assert p.route(1, 5, prefix=7) == spill
+    # requests without a prefix group fall back to least-loaded
+    assert p.route(1, 6) == 2
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+
+def test_scale_up_on_queue_pressure_with_cold_start():
+    p = started()
+    for rid in range(5):            # 5 outstanding > cap 2*2
+        p.route(10, rid)
+    assert p.decisions[-1].kind == "route"
+    p.observe(100)                  # first control boundary
+    ups = [d for d in p.decisions if d.kind == "scale_up"]
+    assert [d.replica for d in ups] == [2]      # ceil(5/2)=3 replicas
+    assert ups[0].tick == 100
+    assert ups[0].note.startswith("queue 5/4")
+    assert p.state(2) == WARMING
+    assert p.serving_replicas() == [0, 1, 2]    # routable while warming
+    assert p.live_replicas() == [0, 1]          # ...but not executing
+    assert p.next_wake() == 150                 # the promotion, not 200
+    p.observe(149)
+    assert p.state(2) == WARMING
+    p.observe(150)
+    assert p.state(2) == LIVE
+    last = p.decisions[-1]
+    assert (last.kind, last.tick, last.replica) == ("replica_up", 150, 2)
+
+
+def test_scale_up_on_slo_pressure():
+    p = started()
+    p.route(10, 0)
+    p.finish(20, 0, ok=False)       # 1/1 window violations > 10%
+    p.observe(100)
+    ups = [d for d in p.decisions if d.kind == "scale_up"]
+    assert len(ups) == 1 and ups[0].note == "slo 1/1"
+
+
+def test_scale_down_retires_idle_newest_after_quiet_windows():
+    p = started(down_windows=3)
+    for rid in range(5):
+        p.route(10, rid)
+    p.observe(100)                  # scale up to 3
+    for rid in range(5):
+        p.finish(160 + rid, rid)
+    p.observe(400)                  # quiet boundaries at 200/300/400
+    downs = [d for d in p.decisions if d.kind == "scale_down"]
+    assert [(d.tick, d.replica) for d in downs] == [(400, 2)]
+    assert p.state(2) == DOWN
+    # never below the floor: arbitrarily many more quiet windows
+    p.observe(2000)
+    assert len([d for d in p.decisions if d.kind == "scale_down"]) == 1
+    assert p.live_replicas() == [0, 1]
+
+
+def test_scale_down_skips_busy_replicas():
+    p = started(down_windows=1, min_replicas=1, max_replicas=2)
+    p.route(10, 0)
+    p.route(10, 1)
+    p.route(10, 2)                  # 3 > cap 2 -> scale up at 100
+    p.observe(100)
+    assert p.state(1) == WARMING
+    p.finish(160, 0)
+    p.finish(160, 1)
+    # rid 2 still outstanding on replica 0; replica 1 (promoted, idle)
+    # is the only retirement candidate even though 0 is older
+    p.observe(300)
+    downs = [d for d in p.decisions if d.kind == "scale_down"]
+    assert [d.replica for d in downs] == [1]
+    p.finish(310, 2)
+
+
+def test_promotion_processed_before_boundary_at_equal_tick():
+    # cold_start == control_period: the ready tick lands exactly on the
+    # next boundary, and the boundary must see the replica live
+    p = started(cold_start_ticks=100)
+    for rid in range(5):
+        p.route(10, rid)
+    p.observe(100)                  # scale_up(2), ready at 200
+    p.observe(200)
+    kinds = [d.kind for d in p.decisions if d.tick == 200]
+    assert kinds[0] == "replica_up"
+    assert p.state(2) == LIVE
+
+
+def test_catch_up_processes_all_missed_boundaries_in_order():
+    p = started()
+    for rid in range(5):
+        p.route(10, rid)
+    # one late event catches up boundary 100 (scale up) AND the
+    # promotion at 150 before routing
+    r = p.route(500, 99)
+    ticks = [d.tick for d in p.decisions]
+    assert ticks == sorted(ticks)
+    assert p.state(2) == LIVE
+    assert r in (0, 1, 2)
+
+
+def test_next_wake_is_boundary_when_nothing_warming():
+    p = started()
+    assert p.next_wake() == 100
+    p.observe(100)
+    assert p.next_wake() == 200
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_state_dict_round_trip_continues_identically():
+    a = started("prefix_affinity")
+    b = started("prefix_affinity")
+
+    def drive(p, t0, rids):
+        for i, rid in enumerate(rids):
+            p.route(t0 + 10 * i, rid, prefix=rid % 3)
+        p.observe(t0 + 100)
+
+    drive(a, 10, range(5))
+    drive(b, 10, range(5))
+    fresh = mk("prefix_affinity")
+    fresh.load_state_dict(a.state_dict())
+    drive(fresh, 200, range(5, 10))
+    drive(b, 200, range(5, 10))
+    assert fresh.decisions == b.decisions
+    assert fresh.state_dict() == b.state_dict()
+
+
+def test_load_rejects_mismatched_configuration():
+    d = started().state_dict()
+    with pytest.raises(ValueError, match="slots_per_replica"):
+        mk(slots_per_replica=4).load_state_dict(d)
+    with pytest.raises(ValueError, match="router"):
+        mk("p2c").load_state_dict(d)
+
+
+def test_all_routers_are_replayable_from_state():
+    """Routing after a restore matches routing without one for every
+    router (no hidden RNG or unserialized state)."""
+    for router in ROUTERS:
+        a = started(router)
+        for rid in range(8):
+            a.route(10 + rid, rid, prefix=rid % 2)
+        b = mk(router)
+        b.load_state_dict(a.state_dict())
+        assert [a.route(200 + i, 100 + i, prefix=i % 2)
+                for i in range(6)] == \
+               [b.route(200 + i, 100 + i, prefix=i % 2)
+                for i in range(6)]

@@ -1,0 +1,280 @@
+"""FleetSim acceptance: the DES fleet and the real FleetController,
+driven by the one pure FleetPolicy, scale and route *identically*
+(decision-log equality on seeded traffic) — plus autoscaler recovery,
+cold-start cost, scale exit events, determinism, and checkpointing."""
+
+import pytest
+
+from repro.core.desim.simnodes import to_ticks
+from repro.serve.fleet import SCALE_KINDS, FleetController
+from repro.serve.fleet_policy import FleetPolicy
+from repro.sim import (ExitEventType, FleetRequest, FleetSim, ServingCost,
+                       Simulator, diurnal_requests, flash_crowd_requests,
+                       v5e_fleet)
+
+COST = ServingCost.from_params(7e9, layers=32, d_model=4096, chips=4)
+
+
+def _policy(router="p2c", **kw):
+    cfg = dict(min_replicas=1, max_replicas=3, slots_per_replica=4,
+               cold_start_ticks=to_ticks(0.25),
+               control_period_ticks=to_ticks(0.25), seed=5)
+    cfg.update(kw)
+    return FleetPolicy(router, **cfg)
+
+
+def _flash(num=60, seed=3):
+    return flash_crowd_requests(num, seed=seed, base_rps=20.0,
+                                crowd_rps=120.0, crowd_start_s=0.5,
+                                crowd_len_s=1.0, prefix_groups=4)
+
+
+def _run(reqs, policy, *, timing="detailed", **params):
+    params.setdefault("seq_capacity", 1024)
+    fleet = FleetSim(cost=COST, requests=reqs, policy=policy, **params)
+    sim = Simulator(v5e_fleet(max_replicas=policy.max_replicas,
+                              nx=2, ny=2), fleet, timing=timing)
+    events = list(sim.run())
+    return fleet, sim, events
+
+
+# ---------------------------------------------------------------------------
+# the headline: DES fleet == real controller, decision for decision
+# ---------------------------------------------------------------------------
+
+def _assert_identity(reqs, policy_fn, **params):
+    fleet, _, _ = _run(reqs, policy_fn(), **params)
+    fired = []
+    ctl = FleetController(policy_fn(), on_scale=fired.append)
+    ctl.replay(fleet.feed, reqs)
+    assert ctl.policy.decisions == fleet.policy.decisions
+    # the provisioner callback saw exactly the scale actions in the log
+    assert fired == [d for d in fleet.policy.decisions
+                     if d.kind in SCALE_KINDS]
+    return fleet
+
+
+def test_flash_crowd_identity_des_vs_controller():
+    fleet = _assert_identity(_flash(), lambda: _policy("p2c"),
+                             slo_ttft_s=0.3, slo_latency_s=2.0)
+    kinds = {d.kind for d in fleet.policy.decisions}
+    # the scenario exercises the whole control plane, not a quiet lap
+    assert {"route", "finish", "scale_up", "replica_up"} <= kinds
+    assert fleet.summary()["requests"] == 60
+
+
+def test_diurnal_identity_with_affinity_and_tenants():
+    reqs = diurnal_requests(50, seed=11, base_rps=15.0, peak_rps=120.0,
+                            period_s=2.0, prefix_groups=4)
+    fleet = _assert_identity(reqs, lambda: _policy("prefix_affinity"),
+                             slo_ttft_s=0.3, slo_latency_s=2.0,
+                             tenant_slo={"batch": 4.0})
+    assert {r.tenant for r in reqs} == {"interactive", "batch"}
+    summ = fleet.summary()
+    assert "p99_ttft_interactive_s" in summ
+    assert "p99_ttft_batch_s" in summ
+
+
+def test_controller_crosschecks_routing_divergence():
+    ctl = FleetController(_policy())
+    r = ctl.on_request(10, 0)
+    with pytest.raises(RuntimeError, match="diverged"):
+        ctl.on_finish(20, 0, replica=r + 1)
+    with pytest.raises(RuntimeError, match="never routed"):
+        ctl.on_finish(20, 99, replica=0)
+
+
+# ---------------------------------------------------------------------------
+# autoscaling behavior on the engine
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_restores_slo_where_fixed_fleet_cannot():
+    """The PR's acceptance scenario (same constants as the committed
+    fleet_sweep rows): after the flash crowd passes, the autoscaled
+    fleet is back to full SLO compliance; the fixed-size fleet, still
+    digesting its backlog, never recovers."""
+    from benchmarks.fleet_sweep import (POST_CROWD_S, check_recovery,
+                                        recovery_lap)
+    auto, fixed, _, _ = recovery_lap()
+    check_recovery(auto, fixed)       # scale-up happened, SLO recovered
+    assert auto.slo_ok_frac(POST_CROWD_S) >= 0.9
+    assert fixed.slo_ok_frac(POST_CROWD_S) <= 0.2
+    assert fixed.summary()["scale_ups"] == 0
+    assert auto.summary()["replicas_peak"] > fixed.summary()["replicas_peak"]
+
+
+def test_scale_events_surface_as_exit_events():
+    fleet, _, events = _run(_flash(), _policy(), slo_ttft_s=0.3,
+                            slo_latency_s=2.0)
+    kinds = [e.kind for e in events]
+    assert kinds[-1] == ExitEventType.DONE
+    ups = [e for e in events if e.kind is ExitEventType.SCALE_UP]
+    assert len(ups) == fleet.summary()["scale_ups"] > 0
+    assert {"replica", "note", "ready_tick"} <= set(ups[0].payload)
+    # the promotion honored the advertised ready tick
+    promos = {d.replica: d.tick for d in fleet.policy.decisions
+              if d.kind == "replica_up" and d.note != "initial"}
+    assert promos[ups[0].payload["replica"]] == ups[0].payload["ready_tick"]
+
+
+def test_cold_start_is_a_first_class_latency_cost():
+    """The same stream served with a 1 s cold start pays visibly more
+    tail TTFT than with instant replicas (work queues on the warming
+    replica until its promotion)."""
+    warm, _, _ = _run(_flash(), _policy(cold_start_ticks=0),
+                      slo_ttft_s=0.3, slo_latency_s=2.0)
+    cold, _, _ = _run(_flash(), _policy(cold_start_ticks=to_ticks(1.0)),
+                      slo_ttft_s=0.3, slo_latency_s=2.0)
+    w, c = warm.summary(), cold.summary()
+    assert c["p50_ttft_s"] > w["p50_ttft_s"]
+    assert c["slo_violations"] > w["slo_violations"]
+    assert c["span_s"] > w["span_s"]
+    assert c["cold_start_s"] == 1.0 and w["cold_start_s"] == 0.0
+
+
+def test_tenant_priority_orders_same_tick_arrivals():
+    t = to_ticks(0.001)
+    reqs = [FleetRequest(0, 64, 8, arrival_tick=t, tenant="batch"),
+            FleetRequest(1, 64, 8, arrival_tick=t, tenant="interactive")]
+    fleet, _, _ = _run(reqs, _policy(max_replicas=1))
+    routes = [row for row in fleet.feed if row[0] == "route"]
+    assert [r[2] for r in routes] == [1, 0]   # interactive outranks batch
+
+
+# ---------------------------------------------------------------------------
+# determinism + fidelity
+# ---------------------------------------------------------------------------
+
+def test_fleet_run_is_deterministic():
+    a, sim_a, _ = _run(_flash(), _policy(), slo_ttft_s=0.3)
+    b, sim_b, _ = _run(_flash(), _policy(), slo_ttft_s=0.3)
+    assert a.summary() == b.summary()
+    assert a.feed == b.feed
+    assert a.policy.decisions == b.policy.decisions
+    assert sim_a.result().makespan_s == sim_b.result().makespan_s
+
+
+def test_atomic_timing_is_exact_for_fleets():
+    det, _, _ = _run(_flash(40), _policy(), slo_ttft_s=0.3,
+                     timing="detailed")
+    atm, _, _ = _run(_flash(40), _policy(), slo_ttft_s=0.3,
+                     timing="atomic")
+    assert atm.summary() == det.summary()
+    assert atm.policy.decisions == det.policy.decisions
+
+
+# ---------------------------------------------------------------------------
+# traffic models
+# ---------------------------------------------------------------------------
+
+def test_traffic_streams_are_seed_reproducible():
+    a = _flash(seed=3)
+    b = _flash(seed=3)
+    c = _flash(seed=4)
+    assert a == b != c
+    assert all(x.arrival_tick <= y.arrival_tick for x, y in zip(a, a[1:]))
+    assert [r.rid for r in a] == list(range(len(a)))
+    assert {r.tenant for r in a} <= {"interactive", "batch"}
+    assert all(0 <= r.prefix_group < 4 for r in a)
+    d = diurnal_requests(30, seed=3, base_rps=10.0, peak_rps=50.0,
+                         period_s=5.0)
+    assert d == diurnal_requests(30, seed=3, base_rps=10.0,
+                                 peak_rps=50.0, period_s=5.0)
+    assert all(r.prefix_group == -1 for r in d)   # groups off by default
+
+
+def test_traffic_validation():
+    with pytest.raises(ValueError, match="peak_rps"):
+        diurnal_requests(5, seed=0, base_rps=50.0, peak_rps=10.0,
+                         period_s=5.0)
+    with pytest.raises(ValueError, match="crowd_rps"):
+        flash_crowd_requests(5, seed=0, base_rps=50.0, crowd_rps=10.0,
+                             crowd_start_s=1.0, crowd_len_s=1.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _fingerprint(fleet, sim):
+    return {
+        "makespan": sim.result().makespan_s,
+        "stats": sim.result().stats,
+        "summary": fleet.summary(),
+        "decisions": fleet.policy.decisions,
+        "feed": fleet.feed,
+    }
+
+
+def test_fleet_checkpoint_resumes_identically():
+    """CHECKPOINT mid-crowd — pending arrivals, warming replicas,
+    in-flight requests — restores into a rebuilt workload and finishes
+    bit-identically to an uninterrupted run."""
+    mk = lambda: FleetSim(cost=COST, requests=_flash(), policy=_policy(),
+                          seq_capacity=1024, slo_ttft_s=0.3,
+                          exit_on_scale=False)
+    board = lambda: v5e_fleet(max_replicas=3, nx=2, ny=2)
+    ref_fleet = mk()
+    ref_sim = Simulator(board(), ref_fleet)
+    ref_sim.run_to_completion()
+    ref = _fingerprint(ref_fleet, ref_sim)
+
+    fleet = mk()
+    sim = Simulator(board(), fleet)
+    sim.schedule_checkpoint(int(ref["makespan"] * 1e9 * 0.4))
+    kinds = [ev.kind for ev in sim.run()]
+    assert kinds == [ExitEventType.CHECKPOINT, ExitEventType.DONE]
+    ckpt = sim.last_checkpoint
+    assert _fingerprint(fleet, sim) == ref
+
+    fresh = mk()
+    sim2 = Simulator.from_checkpoint(ckpt, workload=fresh)
+    sim2.run_to_completion()
+    assert _fingerprint(fresh, sim2) == ref
+
+
+def test_checkpoint_rejects_mismatched_stream_or_policy():
+    fleet = FleetSim(cost=COST, requests=_flash(), policy=_policy(),
+                     seq_capacity=1024)
+    sim = Simulator(v5e_fleet(max_replicas=3, nx=2, ny=2), fleet)
+    ckpt = sim.save_checkpoint()
+    other = FleetSim(cost=COST, requests=_flash(seed=9), policy=_policy(),
+                     seq_capacity=1024)
+    with pytest.raises(ValueError, match="request stream"):
+        Simulator.from_checkpoint(ckpt, workload=other)
+    repol = FleetSim(cost=COST, requests=_flash(),
+                     policy=_policy(slots_per_replica=2), seq_capacity=1024)
+    with pytest.raises(ValueError, match="slots_per_replica"):
+        Simulator.from_checkpoint(ckpt, workload=repol)
+
+
+# ---------------------------------------------------------------------------
+# construction guard rails
+# ---------------------------------------------------------------------------
+
+def test_validation_and_board_sizing():
+    with pytest.raises(ValueError, match="at least one"):
+        FleetSim(cost=COST, requests=[], policy=_policy())
+    with pytest.raises(ValueError, match="rid"):
+        FleetSim(cost=COST, policy=_policy(),
+                 requests=[FleetRequest(3, 64, 8)])
+    with pytest.raises(ValueError, match="fit"):
+        FleetSim(cost=COST, policy=_policy(), seq_capacity=64,
+                 requests=[FleetRequest(0, 100, 8)])
+    with pytest.raises(ValueError, match=">= 1"):
+        FleetSim(cost=COST, policy=_policy(),
+                 requests=[FleetRequest(0, 64, 0)])
+    # a board with fewer pods than the policy's ceiling is refused at
+    # bind time (the run's first step)
+    fleet = FleetSim(cost=COST, requests=_flash(), policy=_policy(),
+                     seq_capacity=1024)
+    with pytest.raises(ValueError, match="pods"):
+        Simulator(v5e_fleet(max_replicas=2, nx=2, ny=2),
+                  fleet).run_to_completion()
+
+
+def test_v5e_fleet_board_shape():
+    board = v5e_fleet(max_replicas=5, nx=2, ny=4)
+    assert board.machine.num_pods == 5
+    assert board.machine.num_chips == 5 * 8
+    assert "v5e_fleet_5x2x4" in board.name

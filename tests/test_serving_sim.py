@@ -162,6 +162,43 @@ def test_request_validation():
 
 
 # ---------------------------------------------------------------------------
+# span semantics: throughput over first-submit -> last-finish
+# ---------------------------------------------------------------------------
+
+def test_offset_trace_reports_real_throughput():
+    """A trace whose arrivals start at t=1000 s (production logs with
+    an epoch offset) must report the throughput of its busy span —
+    span_s used to be measured from tick 0, diluting throughput ~1000x
+    for this stream."""
+    late = trace_requests([(1000.0 + 0.01 * i, 64, 8) for i in range(10)])
+    srv, _, _ = _serve(late, slots=4, seq_capacity=1024)
+    s = srv.summary()
+    assert s["span_s"] < 10.0
+    assert s["throughput_rps"] > 1.0
+    # the same stream shifted to t=0 spans (essentially) the same window
+    base = trace_requests([(0.01 * i, 64, 8) for i in range(10)])
+    srv0, _, _ = _serve(base, slots=4, seq_capacity=1024)
+    assert s["span_s"] == pytest.approx(srv0.summary()["span_s"], rel=1e-3)
+
+
+def test_summary_before_any_finish_is_nan_not_zero():
+    """Mid-run summaries with an empty percentile sketch report NaN,
+    never a fake-perfect 0.0 (and zero rates, not a division blowup)."""
+    reqs = poisson_requests(5, 10.0, seed=1, decode_len=(4, 8))
+    srv = ServeSim(cost=COST, requests=reqs, slots=4, seq_capacity=1024)
+    sim = Simulator(v5e_serving(8, 8), srv)
+    sim.schedule_max_tick(1000)              # 1 us: nothing finished yet
+    ev = next(iter(sim.run()))
+    assert ev.kind == ExitEventType.MAX_TICK
+    s = srv.summary()
+    assert s["requests"] == 0 and s["span_s"] == 0.0
+    assert s["throughput_rps"] == 0.0 and s["goodput_rps"] == 0.0
+    for key in ("p50_ttft_s", "p99_ttft_s", "p50_latency_s",
+                "p99_latency_s", "mean_tpot_s", "mean_batch"):
+        assert s[key] != s[key], f"{key} should be NaN, got {s[key]}"
+
+
+# ---------------------------------------------------------------------------
 # inject_op contract (the executor layer the workloads build on)
 # ---------------------------------------------------------------------------
 

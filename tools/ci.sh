@@ -30,6 +30,15 @@
 #                            # workload AND bit-exact (full ExecResult
 #                            # + stats-tree equality) — fails loudly if
 #                            # pod sharding / clone folding regresses
+#   tools/ci.sh fleet        # autoscaled-serving tier: the flash-crowd
+#                            # lap (benchmarks/fleet_sweep.py
+#                            # --assert-fleet) — asserts the autoscaler
+#                            # scales up, post-crowd SLO compliance
+#                            # recovers (and provably does not on the
+#                            # fixed-size fleet), and the lap is bit-
+#                            # identical across two runs — plus the
+#                            # examples/fleet_sim.py demo with its
+#                            # DES-vs-controller replay identity check
 #   tools/ci.sh trace        # observability tier: fully-instrumented
 #                            # smoke lap (m5out stats.txt/config.json +
 #                            # Perfetto trace, serial and workers=4),
@@ -61,6 +70,13 @@ if [ "${1-}" = "trace" ]; then
   shift
   python -m benchmarks.observability --assert-overhead 5
   echo "trace tier OK"
+  exit 0
+fi
+if [ "${1-}" = "fleet" ]; then
+  shift
+  python -m benchmarks.fleet_sweep --assert-fleet
+  python examples/fleet_sim.py
+  echo "fleet tier OK"
   exit 0
 fi
 if [ "${1-}" = "smoke" ]; then
