@@ -24,7 +24,7 @@ from benchmarks import (checkpoint_fork, collective_protocols, dse_sweep,
                         distgem5_scaling, elastic_trace, engine_microbench,
                         fidelity_spectrum, fleet_sweep, ft_sweep,
                         kernel_throughput, observability, roofline,
-                        sampled_sim, serving_sweep)
+                        sampled_sim, serving_sweep, simpoint_sweep)
 from benchmarks.common import rows_as_dict
 
 BENCHES = [
@@ -35,6 +35,7 @@ BENCHES = [
     ("distgem5_scaling", distgem5_scaling.run),
     ("checkpoint_fork", checkpoint_fork.run),
     ("sampled_sim", sampled_sim.run),
+    ("simpoint_sweep", simpoint_sweep.run),
     ("serving_sweep", serving_sweep.run),
     ("fleet_sweep", fleet_sweep.run),
     ("ft_sweep", ft_sweep.run),

@@ -1,10 +1,14 @@
 """Paper claim §1.3/§2.7: sampled simulation trades detail for speed
 without losing the answer.  A 200-step steady-state training run is
-simulated (a) fully detailed and (b) SMARTS-sampled (detailed windows +
-fast-forward, repro.sim.sampling); derived columns record the
-wall-clock speedup, the fraction of ops that ran at detailed fidelity,
-and the prediction error — the acceptance contract is <=20% detailed
-ops within 5% of the full-detail makespan."""
+simulated (a) fully detailed, (b) SMARTS-sampled (fixed-stride
+detailed windows + fast-forward), and (c) SimPoint-sampled (phase
+fingerprint → k-means → representative windows, weighted
+reconstruction); derived columns record the wall-clock speedup, the
+fraction of ops that ran at detailed fidelity, and the prediction
+error — the acceptance contract is <=20% detailed ops within 5% of
+the full-detail makespan.  On a *steady-state* run both schemes agree
+(one phase, so SimPoint degenerates to a handful of windows); the
+bursty workload where they diverge is ``benchmarks/simpoint_sweep.py``."""
 
 from __future__ import annotations
 
@@ -12,7 +16,8 @@ import time
 
 from benchmarks.common import emit
 from repro.core.desim.trace import analytic_trace
-from repro.sim import SamplePlan, repeat_trace, sampled_run, v5e_pod
+from repro.sim import (SamplePlan, repeat_trace, sampled_run,
+                       simpoint_plan, v5e_pod)
 
 STEPS = 200
 
@@ -38,3 +43,20 @@ def run() -> None:
          f"detailed_ops={100 * sr.detailed_op_fraction:.1f}% "
          f"speedup={t_full / max(t_sampled, 1e-9):.1f}x "
          f"events={sr.events}/{full.events}")
+
+    # SimPoint on the same steady-state run: the fingerprint finds ONE
+    # phase (modulo float jitter), so the plan collapses to a few
+    # representative windows and the weighted reconstruction matches
+    # the stride prediction — the degenerate-case sanity row
+    trace = repeat_trace(step, STEPS)
+    t0 = time.perf_counter()
+    spplan = simpoint_plan(trace, window=2, seed=0)
+    sp = sampled_run(v5e_pod(), trace, STEPS, spplan)
+    t_sp = time.perf_counter() - t0
+    err_sp = (abs(sp.weighted_total_s - full.makespan_s)
+              / full.makespan_s)
+    emit("sampled/simpoint", t_sp * 1e6,
+         f"weighted={sp.weighted_total_s:.4f}s err={100 * err_sp:.2f}% "
+         f"regions={len(spplan.representatives)} "
+         f"detailed_steps={sp.detailed_steps}/{STEPS} "
+         f"speedup={t_full / max(t_sp, 1e-9):.1f}x")

@@ -80,6 +80,9 @@ class ExecResult:
     events: int                     # == engine events_fired (all queues)
     timeline: List[Dict] = field(default_factory=list)
     stats: Optional[Dict[str, Any]] = None   # flat gem5-style stats dump
+    # exact integer makespan tick: makespan_s is this / TICKS_PER_S, and
+    # round-tripping the float back to ticks can drift by ±1 on long runs
+    final_tick: int = 0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -662,6 +665,7 @@ class TraceExecutor:
                            self._wires[p].busy_tick())
                        / TICKS_PER_S for p in range(pods)]
         return ExecResult(
+            final_tick=makespan_tick,
             makespan_s=makespan_tick / TICKS_PER_S,
             compute_s=self._totals["compute"],
             collective_s=self._totals["coll"],

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import json
 import multiprocessing as mp
+import sys
 import traceback
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -60,7 +61,26 @@ from repro.core.desim.simnodes import TICKS_PER_S, to_ticks
 from repro.core.desim.trace import HloTrace
 from repro.core.events import quantum_boundary, quantum_delivery
 
-__all__ = ["ParallelEngine", "plan_shards", "fold_pods"]
+__all__ = ["ParallelEngine", "default_mp_context", "plan_shards",
+           "fold_pods"]
+
+
+def default_mp_context() -> str:
+    """Start method for simulation worker processes.
+
+    fork is cheap (~ms/worker) and preferred where available — but
+    fork()ing a process whose JAX runtime is initialized deadlocks its
+    multithreaded backend (CPython warns ``os.fork() was called ...
+    likely lead to a deadlock``), and any benchmark or test that
+    imported a kernel module has JAX loaded.  Spawn is fully supported
+    here (init payloads are plain data, worker entry points are
+    module-level), so pick it automatically whenever ``jax`` is in
+    ``sys.modules``; an explicit ``mp_context=`` always wins.
+    """
+    if "jax" in sys.modules:
+        return "spawn"
+    return ("fork" if "fork" in mp.get_all_start_methods()
+            else "spawn")
 
 
 # ---------------------------------------------------------------------------
@@ -440,11 +460,7 @@ class ParallelEngine:
             instrument=instrument)
         self.workers = max(1, int(workers))
         if mp_context is None:
-            # fork is cheap (~ms/worker) and the default where available;
-            # spawn is fully supported (init payloads are plain data and
-            # the worker entry point is module-level)
-            mp_context = ("fork" if "fork" in mp.get_all_start_methods()
-                          else "spawn")
+            mp_context = default_mp_context()
         self.mp_context = mp_context
         self._mode: Optional[str] = None   # "serial" | "sync" | "free"
         self._procs: List[Any] = []

@@ -20,6 +20,13 @@ from repro.core.trace import (disable as disable_debug_flags,
 from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
                               v5e_fleet, v5e_multipod, v5e_pod,
                               v5e_serving, v5e_straggler, v5e_unreliable)
+from repro.sim.ckptlib import (CheckpointLibrary, RegionTime,
+                               board_digest, reconstruct, restore_fanout,
+                               take_region_checkpoints, trace_digest)
+from repro.sim.fingerprint import (FEATURE_NAMES, Fingerprint,
+                                   bursty_trace, chain_steps,
+                                   cluster_fingerprint, fingerprint_trace,
+                                   record_op_stream, simpoint_plan)
 from repro.sim.fleet import (FleetRequest, FleetSim, diurnal_requests,
                              flash_crowd_requests)
 from repro.sim.instrument import (OutDir, TraceEventRecorder,
@@ -28,7 +35,8 @@ from repro.sim.instrument import (OutDir, TraceEventRecorder,
 from repro.sim.parallel import (ParallelEngine, merge_stat_trees,
                                 parallel_supported, run_parallel)
 from repro.sim.sampling import (SampledResult, SampledSimulation,
-                                SamplePlan, atomic_step_time_s, sampled_run)
+                                SamplePlan, SimPointPlan,
+                                atomic_step_time_s, sampled_run)
 from repro.sim.serialize import (CHECKPOINT_VERSION, WORKLOAD_KEY,
                                  WORKLOAD_KIND_KEY, CheckpointError,
                                  checkpoint_executor, load_checkpoint,
@@ -52,8 +60,13 @@ __all__ = [
     "poisson_requests", "trace_requests", "uniform_requests",
     "FleetSim", "FleetRequest", "diurnal_requests",
     "flash_crowd_requests",
-    "SamplePlan", "SampledResult", "SampledSimulation", "sampled_run",
-    "atomic_step_time_s",
+    "SamplePlan", "SimPointPlan", "SampledResult", "SampledSimulation",
+    "sampled_run", "atomic_step_time_s",
+    "FEATURE_NAMES", "Fingerprint", "fingerprint_trace",
+    "cluster_fingerprint", "simpoint_plan", "record_op_stream",
+    "chain_steps", "bursty_trace",
+    "CheckpointLibrary", "RegionTime", "board_digest", "trace_digest",
+    "take_region_checkpoints", "restore_fanout", "reconstruct",
     "CHECKPOINT_VERSION", "WORKLOAD_KEY", "WORKLOAD_KIND_KEY",
     "CheckpointError",
     "checkpoint_executor", "save_checkpoint", "load_checkpoint",

@@ -76,7 +76,8 @@ class Board:
         # must not be overridden by an atomic board default)
         if kw.get("timing") is None and kw.get("contention") is None:
             kw["timing"] = self.timing
-        workers = int(kw.pop("workers", None) or 1)
+        from repro.sim.serialize import validate_workers
+        workers = validate_workers(kw.pop("workers", None))
         mp_context = kw.pop("mp_context", None)
         if workers > 1:
             from repro.core.desim.parallel import ParallelEngine

@@ -62,7 +62,7 @@ class SamplePlan:
         """Ordered ("detailed"|"ff", n_steps) segments covering the run."""
         segs: List[Tuple[str, int]] = []
         pos = 0
-        if self.warmup:
+        if self.warmup and num_steps > 0:
             w = min(self.warmup, num_steps)
             segs.append(("detailed", w))
             pos = w
@@ -83,6 +83,72 @@ class SamplePlan:
 
 
 @dataclass
+class SimPointPlan:
+    """SimPoint sampling schedule: detailed windows picked by phase
+    clustering, not a fixed stride (gem5 §1.3; built automatically by
+    :func:`repro.sim.fingerprint.simpoint_plan`).
+
+    ``window``          : steps per window (the fingerprint interval).
+    ``representatives`` : sorted window indices to run detailed — one
+                          per cluster.
+    ``weights``         : aligned with ``representatives``; each is the
+                          cluster's share of all windows (sums to 1).
+    ``labels``          : optional per-window cluster ids (provenance,
+                          not used by the schedule).
+
+    ``segments()`` has the same contract as :class:`SamplePlan`, with
+    one extra guarantee: detailed segments are never merged, so the
+    i-th detailed window of a sampled run is ``representatives[i]`` and
+    its measured step time pairs with ``weights[i]`` for the weighted
+    reconstruction ``total ≈ num_steps * Σ w_i * step_time_i``.
+    """
+
+    window: int = 1
+    representatives: List[int] = field(default_factory=list)
+    weights: List[float] = field(default_factory=list)
+    labels: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError("need window >= 1")
+        if len(self.weights) != len(self.representatives):
+            raise ValueError("weights must align with representatives")
+        if list(self.representatives) != sorted(set(self.representatives)):
+            raise ValueError("representatives must be sorted and unique")
+        if self.weights and abs(sum(self.weights) - 1.0) > 1e-9:
+            raise ValueError(
+                f"weights must sum to 1 (got {sum(self.weights)})")
+
+    def segments(self, num_steps: int) -> List[Tuple[str, int]]:
+        """One ("detailed"|"ff", n_steps) segment per window."""
+        reps = set(self.representatives)
+        segs: List[Tuple[str, int]] = []
+        pos = widx = 0
+        while pos < num_steps:
+            n = min(self.window, num_steps - pos)
+            segs.append(("detailed" if widx in reps else "ff", n))
+            pos += n
+            widx += 1
+        return segs
+
+    def detailed_fraction(self, num_steps: int) -> float:
+        det = sum(n for kind, n in self.segments(num_steps)
+                  if kind == "detailed")
+        return det / max(num_steps, 1)
+
+    def weighted_total_s(self, num_steps: int,
+                         window_step_s: List[float]) -> float:
+        """SimPoint reconstruction from measured per-step window times
+        (aligned with ``representatives``)."""
+        if len(window_step_s) != len(self.representatives):
+            raise ValueError(
+                f"{len(window_step_s)} window times for "
+                f"{len(self.representatives)} representatives")
+        return num_steps * sum(w * s for w, s
+                               in zip(self.weights, window_step_s))
+
+
+@dataclass
 class SampledResult:
     num_steps: int
     detailed_steps: int
@@ -93,6 +159,12 @@ class SampledResult:
     events: int                        # engine events actually fired
     segments: List[Tuple[str, int]] = field(default_factory=list)
     stats: Optional[Dict[str, Any]] = None   # full-run gem5 stats tree
+    # SimPoint reconstruction num_steps * Σ w_i * step_time_i — only
+    # set when the plan carries weights (a SimPointPlan).  Unlike
+    # predicted_total_s (the in-engine final tick, which times
+    # non-representative regions at atomic fidelity), this estimates
+    # what a FULL-DETAIL run would cost.
+    weighted_total_s: Optional[float] = None
 
     @property
     def mean_step_s(self) -> float:
@@ -139,7 +211,7 @@ class SampledSimulation:
     """
 
     def __init__(self, board: Board, step: HloTrace, num_steps: int,
-                 plan: Optional[SamplePlan] = None,
+                 plan: Optional[Any] = None,
                  ff_mode: str = "atomic"):
         if ff_mode != "atomic":
             raise ValueError(
@@ -152,6 +224,17 @@ class SampledSimulation:
         self.num_steps = int(num_steps)
         self.plan = plan or SamplePlan()
         self.ff_mode = ff_mode
+        # A pre-chained multi-step trace (repeat_trace / chain_steps
+        # stamp meta["steps"]) is used as-is: non-steady-state
+        # workloads have per-step differences a repeated single step
+        # cannot express.  Anything else is a one-step trace repeated.
+        self._full_trace = (
+            self.num_steps > 1
+            and int(step.meta.get("steps", 0)) == self.num_steps)
+        if self._full_trace and len(step.ops) % self.num_steps:
+            raise ValueError(
+                f"chained trace has {len(step.ops)} ops, not divisible "
+                f"into {self.num_steps} uniform steps")
         self._result: Optional[SampledResult] = None
 
     # ------------------------------------------------------------------
@@ -171,10 +254,16 @@ class SampledSimulation:
         return fresh.restore(ex._trace, state)
 
     def run(self) -> Iterator[ExitEvent]:
-        atomic = atomic_step_time_s(self.board, self.step)
         segs = self.plan.segments(self.num_steps)
-        n_ops = len(self.step.ops)
-        trace = repeat_trace(self.step, self.num_steps)
+        if self._full_trace:
+            trace = self.step
+            n_ops = len(trace.ops) // self.num_steps
+            atomic = (atomic_step_time_s(self.board, trace)
+                      / self.num_steps)
+        else:
+            n_ops = len(self.step.ops)
+            trace = repeat_trace(self.step, self.num_steps)
+            atomic = atomic_step_time_s(self.board, self.step)
 
         progress = {"ops": 0, "detailed_ops": 0, "last_end": 0,
                     "model": "detailed" if segs and segs[0][0] == "detailed"
@@ -197,6 +286,14 @@ class SampledSimulation:
         pos = 0
         for kind, n in segs:
             want = "detailed" if kind == "detailed" else "atomic"
+            # span starts BEFORE any switch: the drain completes the
+            # boundary ops already in flight (the next step's compute,
+            # issued the moment the previous sinks landed) under the
+            # old model — compute costs are model-identical, and those
+            # ops belong to THIS segment, so charging them here keeps
+            # window_step_s honest (the SimPoint reconstruction
+            # multiplies these by cluster weights)
+            seg_start = progress["last_end"]
             if want != progress["model"]:
                 ex = self._switch(ex, want)
                 progress["model"] = want
@@ -207,7 +304,6 @@ class SampledSimulation:
                     tick=progress["last_end"],
                     cause=f"window @ step {pos} ({n} steps)",
                     payload={"step": pos, "steps": n})
-            seg_start = progress["last_end"]
             target = (pos + n) * n_ops
             ex.advance(stop_check=lambda: progress["ops"] >= target)
             if kind == "detailed":
@@ -218,6 +314,10 @@ class SampledSimulation:
         ex.advance()                 # lagging pods finish the last step
         res = ex.result()
 
+        weighted = None
+        if getattr(self.plan, "weights", None):
+            weighted = self.plan.weighted_total_s(self.num_steps,
+                                                  window_step_s)
         self._result = SampledResult(
             num_steps=self.num_steps,
             detailed_steps=detailed,
@@ -228,9 +328,10 @@ class SampledSimulation:
             atomic_step_s=atomic,
             events=res.events,
             segments=segs,
-            stats=res.stats)
+            stats=res.stats,
+            weighted_total_s=weighted)
         yield ExitEvent(ExitEventType.DONE,
-                        tick=int(round(res.makespan_s * TICKS_PER_S)),
+                        tick=res.final_tick,
                         cause=f"sampled {detailed}/{self.num_steps} steps")
 
     def result(self) -> SampledResult:
@@ -240,9 +341,12 @@ class SampledSimulation:
 
 
 def sampled_run(board: Board, step: HloTrace, num_steps: int,
-                plan: Optional[SamplePlan] = None,
+                plan: Optional[Any] = None,
                 ff_mode: str = "atomic") -> SampledResult:
-    """One-shot sampled simulation (drains the exit-event stream)."""
+    """One-shot sampled simulation (drains the exit-event stream).
+    ``plan``: a :class:`SamplePlan` (fixed stride) or
+    :class:`SimPointPlan` (phase-clustered; adds ``weighted_total_s``
+    to the result)."""
     sim = SampledSimulation(board, step, num_steps, plan, ff_mode)
     for _ in sim.run():
         pass

@@ -55,6 +55,25 @@ class CheckpointError(RuntimeError):
     pass
 
 
+def validate_workers(workers: Optional[int]) -> int:
+    """``None`` means "serial" (1); anything else must be an int >= 1.
+
+    ``workers=0`` used to be silently coerced to 1 via ``int(x or 1)``
+    — a config typo that *looked* parallel but ran serial.  Reject it
+    the way :class:`~repro.core.events.EventQueue` rejects negative
+    ticks: loudly, at the call site.
+    """
+    if workers is None:
+        return 1
+    w = int(workers)
+    if w < 1:
+        raise ValueError(
+            f"cannot build an executor with workers={workers!r} "
+            "(worker count is a process count, >= 1; omit it or pass "
+            "None for the serial engine)")
+    return w
+
+
 # ---------------------------------------------------------------------------
 # machine description
 # ---------------------------------------------------------------------------
@@ -158,7 +177,7 @@ def restore_executor(ckpt: Dict[str, Any],
     # a None override must not shadow the checkpointed timing model
     cfg.update({k: v for k, v in overrides.items()
                 if not (k in ("timing", "contention") and v is None)})
-    workers = int(cfg.pop("workers", None) or 1)
+    workers = validate_workers(cfg.pop("workers", None))
     mp_context = cfg.pop("mp_context", None)
     if workers > 1:
         from repro.core.desim.parallel import ParallelEngine

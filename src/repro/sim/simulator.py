@@ -497,7 +497,7 @@ class Simulator:
                 # restart at 0 but the simulated time does not
                 yield ExitEvent(
                     ExitEventType.DONE,
-                    tick=int(round(self._result.makespan_s * TICKS_PER_S)),
+                    tick=self._result.final_tick,
                     cause="workload complete")
                 return
             sched_tick = self._scheduled[0][0] if self._scheduled else None
@@ -640,7 +640,7 @@ class Simulator:
         as data.  Available once the run is DONE."""
         res = self.result()
         tick = (self._final_tick if self._final_tick is not None
-                else int(round(res.makespan_s * TICKS_PER_S)))
+                else res.final_tick)
         return inst.host_record(tick, self._host_seconds, res.events)
 
     def write_trace(self, path: Optional[str] = None) -> str:

@@ -1,0 +1,32 @@
+"""Subprocess probe for tests/test_simpoint.py's determinism test.
+
+Builds the bursty reference trace, fingerprints it, clusters it, and
+prints a JSON digest of everything a SimPoint plan must pin down from
+a seed alone: feature vectors, cluster labels, representatives,
+weights.  Executed in a FRESH interpreter per invocation with
+different PYTHONHASHSEEDs — any dict-iteration-order leak in the
+feature ordering or the clustering shows up as a digest mismatch.
+
+    python tests/_simpoint_probe.py <seed>
+"""
+
+import json
+import sys
+
+
+def plan_digest(seed: int):
+    from repro.sim import bursty_trace, fingerprint_trace, simpoint_plan
+    trace = bursty_trace(num_steps=60, burst_start=30, burst_len=12,
+                         seed=seed)
+    fp = fingerprint_trace(trace, window=2)
+    plan = simpoint_plan(trace, window=2, seed=seed)
+    return {
+        "vectors": fp.vectors,
+        "labels": plan.labels,
+        "representatives": plan.representatives,
+        "weights": plan.weights,
+    }
+
+
+if __name__ == "__main__":
+    json.dump(plan_digest(int(sys.argv[1])), sys.stdout, sort_keys=True)

@@ -280,3 +280,33 @@ def test_close_is_idempotent():
     eng.result()
     eng.close()
     eng.close()
+
+
+# ---------------------------------------------------------------------------
+# mp-context selection (the JAX/os.fork RuntimeWarning fix)
+# ---------------------------------------------------------------------------
+
+def test_default_mp_context_is_spawn_under_jax():
+    """With jax loaded (it always is in this suite — the kernels import
+    it), forking is unsafe (XLA's threads deadlock in the child) and
+    CPython warns on every os.fork().  The engine must therefore pick
+    spawn on its own."""
+    import sys
+    import jax  # noqa: F401  (force it into sys.modules)
+    from repro.core.desim.parallel import default_mp_context
+    assert "jax" in sys.modules
+    assert default_mp_context() == "spawn"
+
+
+def test_run_parallel_emits_no_fork_runtimewarning(serial_ref):
+    """Regression: ParallelEngine used to default to fork whenever the
+    platform offered it, tripping CPython's multi-threaded-fork
+    RuntimeWarning once per worker under JAX.  Escalate that warning to
+    an error around a real parallel lap."""
+    import warnings
+    import jax  # noqa: F401
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        got = run_parallel(_board(), _trace(), workers=2,
+                           record_stats=True)
+    assert got == serial_ref

@@ -111,3 +111,46 @@ def test_sampling_rejects_bad_ff_mode():
     # rewrite; the error says where to look
     with pytest.raises(ValueError, match="in-engine"):
         SampledSimulation(v5e_pod(), _step(), 10, ff_mode="extrapolate")
+
+
+# ---------------------------------------------------------------------------
+# SamplePlan.segments edge cases
+# ---------------------------------------------------------------------------
+
+def test_segments_warmup_covers_whole_run():
+    # warmup >= num_steps: one detailed segment, nothing else
+    plan = SamplePlan(warmup=10, interval=12, window=2)
+    assert plan.segments(10) == [("detailed", 10)]
+    assert plan.segments(3) == [("detailed", 3)]
+    assert plan.detailed_fraction(3) == 1.0
+
+
+def test_segments_interval_equals_window_is_all_detailed():
+    # interval == window leaves no room to fast-forward
+    plan = SamplePlan(warmup=0, interval=3, window=3)
+    segs = plan.segments(9)
+    assert all(kind == "detailed" for kind, _ in segs)
+    assert sum(n for _, n in segs) == 9
+    assert plan.detailed_fraction(9) == 1.0
+
+
+def test_segments_zero_and_one_step():
+    plan = SamplePlan(warmup=2, interval=12, window=2)
+    # num_steps=0: NO segments at all — in particular no zero-length
+    # ("detailed", 0) warmup stub (regression: the old code emitted one)
+    assert plan.segments(0) == []
+    assert plan.segments(1) == [("detailed", 1)]
+    no_warm = SamplePlan(warmup=0, interval=12, window=2)
+    assert no_warm.segments(0) == []
+    assert no_warm.segments(1) == [("detailed", 1)]
+
+
+def test_segments_never_zero_length():
+    for warmup in (0, 1, 5):
+        for interval, window in ((2, 1), (2, 2), (12, 2), (7, 7)):
+            plan = SamplePlan(warmup=warmup, interval=interval,
+                              window=window)
+            for n in (0, 1, 2, 7, 24, 100):
+                segs = plan.segments(n)
+                assert sum(c for _, c in segs) == n
+                assert all(c > 0 for _, c in segs), (plan, n, segs)

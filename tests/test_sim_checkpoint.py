@@ -385,3 +385,28 @@ def test_drained_executor_snapshot_roundtrips_partial_rendezvous():
     out = ex2.result()
     assert out.makespan_s == ref.makespan_s
     assert out.stats == ref.stats
+
+
+def test_worker_count_validation_is_loud():
+    """workers=0 used to be silently coerced to 1 — a config typo that
+    LOOKED parallel but ran serial.  Both the board front-end and the
+    restore path now reject non-positive counts the way EventQueue
+    rejects negative ticks."""
+    board = v5e_pod()
+    with pytest.raises(ValueError, match="workers=-1"):
+        board.executor(workers=-1)
+    with pytest.raises(ValueError, match="workers=0"):
+        board.executor(workers=0)
+
+    ex = board.executor(record_stats=True)
+    trace = analytic_trace("w", 4, 1e12, 1e9, COLLS)
+    ex.begin(trace)
+    ex.advance()
+    ex.drain()
+    ckpt = checkpoint_executor(ex)
+    with pytest.raises(ValueError, match="workers=0"):
+        restore_executor(ckpt, workers=0)
+    # None / omitted means the serial engine, exactly as before
+    ex2 = restore_executor(ckpt, record_stats=True)
+    ex2.advance()
+    assert ex2.result().stats == ex.result().stats

@@ -39,6 +39,14 @@
 #                            # identical across two runs — plus the
 #                            # examples/fleet_sim.py demo with its
 #                            # DES-vs-controller replay identity check
+#   tools/ci.sh simpoint     # sampling-accuracy tier: the bursty
+#                            # reference workload (benchmarks/
+#                            # simpoint_sweep.py --assert-simpoint) —
+#                            # asserts the SimPoint-weighted
+#                            # reconstruction AND the checkpoint-library
+#                            # fanout land within 5% of the full-detail
+#                            # total while the equal-budget fixed-stride
+#                            # plan misses by more
 #   tools/ci.sh trace        # observability tier: fully-instrumented
 #                            # smoke lap (m5out stats.txt/config.json +
 #                            # Perfetto trace, serial and workers=4),
@@ -64,6 +72,12 @@ if [ "${1-}" = "parallel" ]; then
   shift
   python -m benchmarks.distgem5_scaling --assert-parallel 2
   echo "parallel tier OK"
+  exit 0
+fi
+if [ "${1-}" = "simpoint" ]; then
+  shift
+  python -m benchmarks.simpoint_sweep --assert-simpoint
+  echo "simpoint tier OK"
   exit 0
 fi
 if [ "${1-}" = "trace" ]; then
