@@ -152,7 +152,10 @@ class HierarchicalAlgorithm(CollectiveAlgorithm):
     name = "hierarchical"
 
     def phases(self, kind, nbytes, participants, machine):
-        pods = machine.num_pods
+        # total_pods, not num_pods: on a dist-gem5 shard machine the DCN
+        # ring spans the *global* pod count (ParallelEngine sets
+        # machine.global_num_pods), so shard and serial cost identically
+        pods = getattr(machine, "total_pods", None) or machine.num_pods
         per_pod = max(1, participants // max(pods, 1))
         ici = machine.pod.ici
         dcn = machine.dcn

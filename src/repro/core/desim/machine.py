@@ -95,6 +95,13 @@ class ClusterModel(SimObject):
     num_pods = Param(int, 1, "number of pods", check=lambda v: v >= 1)
     # dist-gem5 quantum for multi-pod DES synchronization (ns ticks)
     quantum_ns = Param(int, 100_000, "sync quantum in ns")
+    # cost context for sharded simulation: a dist-gem5 shard machine
+    # carries only its own pods (num_pods = shard size) but collective
+    # cost models must price the *global* topology; 0 = "I am the whole
+    # machine" (the default for every non-shard machine)
+    global_num_pods = Param(int, 0, "global pod count when this machine "
+                            "is a shard of a larger one (0 = not a shard)",
+                            check=lambda v: v >= 0)
 
     def __init__(self, name: str = "cluster", pod: Optional[PodModel] = None,
                  dcn: Optional[DcnModel] = None, **kw):
@@ -105,6 +112,14 @@ class ClusterModel(SimObject):
     @property
     def num_chips(self) -> int:
         return self.num_pods * self.pod.num_chips
+
+    @property
+    def total_pods(self) -> int:
+        """Pod count of the machine this model *represents*: the global
+        count for a shard (``global_num_pods`` set by ParallelEngine),
+        ``num_pods`` otherwise.  Collective cost models must use this so
+        a shard prices DCN phases identically to the full machine."""
+        return self.global_num_pods or self.num_pods
 
     # -- roofline terms (per step, whole machine) -----------------------
     def roofline_terms(self, total_flops: float, total_bytes: float,

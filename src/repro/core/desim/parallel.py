@@ -20,6 +20,17 @@ N worker processes:
   hook, replays the rendezvous/uplink/stat updates in the serial
   engine's canonical order, and broadcasts completion deliveries back —
   pipes carry only rendezvous metadata, never simulation objects.
+* **Batched barriers + lookahead elision** (dist-gem5's quantum
+  batching, gem5-20 §4): one message per worker per *grant* carries all
+  of the shard's arrivals (one row per clone class, expanded by the
+  coordinator) plus per-queue next-event ticks, and the coordinator
+  grants multi-quantum advances across rendezvous-free gaps — a queue
+  free-runs until it either captures a new DCN arrival (it then stops
+  on its own) or reaches the safe horizon protecting queues with
+  undelivered completions (``rendezvous_horizon``).  Dense-quantum
+  configs collapse from one barrier per quantum to ~two per DCN
+  collective; ``ParallelEngine.sync_stats`` exports barrier/message
+  counters so the win is observable and test-assertable.
 * **SPMD clone folding**: within a shard, pods whose straggler slowdown
   (and, on restore, whole serialized per-pod state) are identical evolve
   identically — per-pod evolution is a pure function of (trace, machine,
@@ -35,9 +46,10 @@ and decision logs are bit-identical to the serial engine.  The engine
 falls back to the in-process serial path when sharding cannot be exact:
 dynamic workloads (``inject_op`` feedback couples pods through the
 host), dcn traffic under atomic timing or ``quantum_ns == 0`` (exact-
-tick delivery needs the global tick-ordered merge), the
-``hierarchical`` intra-pod algorithm (its cost depends on the global
-pod count), or fewer than 2 pods/workers.
+tick delivery needs the global tick-ordered merge), or fewer than 2
+pods/workers.  The ``hierarchical`` collective algorithm shards too:
+shard machines carry ``global_num_pods`` so its intra-pod RS/AG and
+DCN-ring phases cost identically to the full machine.
 
 Checkpoints are worker-count-agnostic: collection loads worker state
 into a dormant serial facade executor and calls its ``snapshot()``
@@ -50,6 +62,7 @@ from __future__ import annotations
 import json
 import multiprocessing as mp
 import sys
+import time
 import traceback
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -59,10 +72,20 @@ from repro.core.desim.executor import ExecResult, TraceExecutor
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.simnodes import TICKS_PER_S, to_ticks
 from repro.core.desim.trace import HloTrace
-from repro.core.events import quantum_boundary, quantum_delivery
+from repro.core.events import (quantum_boundary, quantum_delivery,
+                               rendezvous_horizon)
+from repro.core.stats import StatGroup
 
 __all__ = ["ParallelEngine", "default_mp_context", "plan_shards",
-           "fold_pods"]
+           "fold_pods", "PARALLEL_PROTOCOL"]
+
+#: wire-protocol version of the coordinator<->worker pipe messages and
+#: of the parallel checkpoint layout.  v1: one barrier per quantum, one
+#: arrival row per member pod.  v2: batched grants with lookahead
+#: elision, one arrival row per clone class.  Embedded in checkpoint
+#: documents (``repro.sim.serialize``) for forensics — checkpoints
+#: themselves stay serial-format and protocol-agnostic.
+PARALLEL_PROTOCOL = 2
 
 
 def default_mp_context() -> str:
@@ -223,12 +246,17 @@ class _ShardRuntime:
         self.labels = labels
         self.barrier_mode: bool = bool(init["barrier_mode"])
         self.seq = 0                      # worker-local event sequence
-        self.era = 0                      # barrier index (sync mode)
         self.outbox: List[Dict[str, Any]] = []
         self.markers: List[List[int]] = []
         self.stash: Dict[Tuple[int, int], dict] = {}
         self.defer_tags: List[Tuple[int, int]] = []
         self._suppress = False            # restored arrivals: stash only
+        self.hwm = 0                      # max tick actually *fired*
+        # per-local-pod count of captured-but-undelivered dcn arrivals:
+        # a queue with outstanding arrivals must respect the grant
+        # horizon; one with none may free-run to its next capture
+        self._outstanding: List[int] = []
+        self._hit: List[bool] = []        # "captured a NEW arrival" latch
         # debug flags don't inherit under spawn: re-apply the parent's
         self._flags = list(init.get("debug_flags") or [])
         if self._flags:
@@ -239,7 +267,11 @@ class _ShardRuntime:
         m = ClusterModel(init["machine"].get("name", "cluster"))
         m.load_serialized(init["machine"], strict=False)
         m.num_pods = len(labels)          # shard-sized machine
+        # cost context: collective algorithms that read the pod count
+        # (hierarchical) must see the *global* machine, not the shard
+        m.global_num_pods = int(init["global_pods"])
         m.instantiate()
+        self.quantum = int(m.quantum_ns)
         self.ex = TraceExecutor(
             m, algorithm=init["algorithm"],
             record_timeline=init["record_timeline"],
@@ -254,18 +286,25 @@ class _ShardRuntime:
             # the coordinator replays them into the real op_hook
             self.ex.op_hook = (lambda op, idx, start, end:
                                self.markers.append([idx, start, end]))
+        self._outstanding = [0] * len(labels)
+        self._hit = [False] * len(labels)
         # tag deferred-frontier entries as they are appended, so the
         # coordinator can reassemble the serial engine's chronological
-        # deferred order: (era, seq) under barriers, (tick, seq) in
-        # free-run mode (global pod id disambiguates across workers)
+        # deferred order.  Under barriers the serial engine defers in
+        # (barrier round, pod, order) order; the round of a deferral is
+        # the quantum boundary of the event that triggered it, which is
+        # computable locally even when a lookahead grant spans many
+        # rounds.  Free-run mode uses the raw tick (the serial no-sync
+        # merge is globally tick-ordered).
         orig_issue = self.ex._issue
 
         def tagged_issue(p: int, idx: int, ready: int) -> None:
             before = len(self.ex._deferred)
             orig_issue(p, idx, ready)
             if len(self.ex._deferred) > before:
-                mark = self.era if self.barrier_mode \
-                    else self.ex._queues[p].now
+                now = self.ex._queues[p].now
+                mark = quantum_boundary(now, self.quantum) \
+                    if self.barrier_mode else now
                 self.defer_tags.append((int(mark), self.seq))
                 self.seq += 1
 
@@ -286,17 +325,21 @@ class _ShardRuntime:
     def _capture(self, payload: dict) -> None:
         p = payload["pod"]
         self.stash[(payload["op_idx"], p)] = payload
+        self._outstanding[p] += 1
         if self._suppress:
             return                        # restored arrival: the
             # coordinator already holds it in its rendezvous map
-        for g in self.members[p]:
-            self.outbox.append({
-                "op": payload["op_idx"], "pod": g,
-                "ready": payload["ready"], "seq": self.seq,
-                "kind": payload.get("kind"),
-                "name": payload.get("name"),
-                "nbytes": payload.get("nbytes"),
-                "participants": payload.get("participants")})
+        self._hit[p] = True               # lookahead stop-at-arrival
+        # ONE row per clone class — the coordinator expands it to the
+        # member pods (it planned the folding), keeping pipe traffic
+        # O(classes) instead of O(pods)
+        self.outbox.append({
+            "op": payload["op_idx"], "rep": p,
+            "ready": payload["ready"], "seq": self.seq,
+            "kind": payload.get("kind"),
+            "name": payload.get("name"),
+            "nbytes": payload.get("nbytes"),
+            "participants": payload.get("participants")})
         self.seq += 1
 
     # -- reporting -------------------------------------------------------
@@ -309,6 +352,9 @@ class _ShardRuntime:
             "arrivals": self.outbox,
             "markers": self.markers,
             "next_tick": nt,
+            "nexts": nts,                 # per clone class, for lookahead
+            "nows": [q.now for q in ex._queues],
+            "hwm": self.hwm,              # max tick actually fired
             "done": ex.done(),
             "now": max(q.now for q in ex._queues),
             "idle": (all(q.empty() for q in ex._queues)
@@ -318,16 +364,16 @@ class _ShardRuntime:
         return rep
 
     # -- commands --------------------------------------------------------
-    def cmd_advance(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
-        """One quantum barrier: schedule due dcn completion deliveries,
-        run every local queue to the boundary (mirrors
-        ``QuantumSync._advance_to``)."""
-        self.era += 1
-        for c in cmd["completions"]:
+    def _deliver(self, completions: List[Dict[str, Any]]) -> None:
+        """Schedule due dcn completion deliveries at their exact
+        delivery ticks (mirrors ``QuantumSync._advance_to``; the grant
+        horizon guarantees no recipient queue has run past them)."""
+        for c in completions:
             for p in range(len(self.labels)):
                 w = self.stash.pop((c["op"], p), None)
                 if w is None:
                     continue
+                self._outstanding[p] -= 1
                 w.update(start=c["start"], dur=c["dur"])
                 q = self.ex._queues[p]
                 done = w["done"]
@@ -336,9 +382,51 @@ class _ShardRuntime:
                     (lambda w=w, q=q, done=done, start=c["start"]:
                      done(start, q.now, w)),
                     at, name=w.get("name", "dcn"))
-        t = int(cmd["t"])
-        for q in self.ex._queues:
-            q.run_until(t)
+
+    def _step_to(self, q, limit: Optional[int]) -> None:
+        """Fire events without pushing ``q.now`` past them (unlike
+        ``run_until``), so a queue stopped mid-grant reports its true
+        position and later deliveries land at their exact ticks."""
+        while True:
+            nt = q.next_tick()
+            if nt is None or (limit is not None and nt > limit):
+                return
+            q.step()
+            if q.now > self.hwm:
+                self.hwm = q.now
+
+    def cmd_advance(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
+        """One batched grant: deliver due completions, then either run
+        every queue to an explicit barrier tick (``align`` — the classic
+        serial-schedule barrier, also used for the final queue-position
+        alignment) or free-run each queue under lookahead: a queue stops
+        on its own when it captures a NEW dcn arrival, queues holding
+        undelivered arrivals additionally respect ``horizon``, and
+        ``limit`` (advance's max_tick) caps everyone."""
+        self._deliver(cmd["completions"])
+        align = cmd.get("align")
+        if align is not None:
+            t = int(align)
+            for q in self.ex._queues:
+                self._step_to(q, t)       # fire (tracking hwm) ...
+                q.run_until(t)            # ... then clamp now = t
+            return self.report()
+        horizon = cmd.get("horizon")
+        limit = cmd.get("limit")
+        for p, q in enumerate(self.ex._queues):
+            lim = limit
+            if self._outstanding[p] > 0 and horizon is not None:
+                lim = horizon if lim is None else min(lim, horizon)
+            self._hit[p] = False
+            while True:
+                nt = q.next_tick()
+                if nt is None or (lim is not None and nt > lim):
+                    break
+                q.step()
+                if q.now > self.hwm:
+                    self.hwm = q.now
+                if self._hit[p]:
+                    break                 # stopped at a fresh arrival
         return self.report()
 
     def cmd_advance_free(self, cmd: Dict[str, Any]) -> Dict[str, Any]:
@@ -382,18 +470,23 @@ class _ShardRuntime:
 
 
 def _worker_main(conn) -> None:
-    """Worker process entry point (module-level: spawn-safe)."""
+    """Worker process entry point (module-level: spawn-safe).
+
+    Processes stay warm across laps: an ``init`` command rebuilds the
+    shard runtime in place (spawn-context startup re-imports heavy
+    modules once, not once per ``begin()``/``restore()``)."""
     rt = None
     try:
-        init = conn.recv()
-        rt = _ShardRuntime(init)
-        conn.send(rt.report())
         while True:
             cmd = conn.recv()
             op = cmd.get("cmd")
             if op == "exit":
                 break
-            conn.send(getattr(rt, f"cmd_{op}")(cmd))
+            if op == "init":
+                rt = _ShardRuntime(cmd["init"])
+                conn.send(rt.report())
+            else:
+                conn.send(getattr(rt, f"cmd_{op}")(cmd))
     except EOFError:
         pass
     except BaseException:
@@ -471,6 +564,45 @@ class ParallelEngine:
         self._draining = False
         self._collected: Optional[List[Dict[str, Any]]] = None
         self._finalizer: Optional[weakref.finalize] = None
+        # lookahead bookkeeping (sync mode)
+        self._hwm = 0                      # max tick fired by any worker
+        self._aligned_to = 0               # last alignment barrier tick
+        self._align_goal = 0               # serial end-of-advance position
+        self._wmembers: List[List[List[int]]] = []   # per worker: members
+        self._owner: Dict[int, Tuple[int, int]] = {}  # pod -> (widx, rep)
+        self._reset_lap_stats()
+
+    def _reset_lap_stats(self) -> None:
+        """Coordinator-local counters + phase timers, fresh per lap.
+        Deliberately NOT part of the facade stats tree: barrier counts
+        are a property of the parallel schedule, and the facade tree
+        must stay bit-identical to a serial run."""
+        s = StatGroup("parallel")
+        self.st_barriers = s.scalar(
+            "barriers", "coordinator round trips (grants + alignments)")
+        self.st_grants = s.scalar(
+            "lookahead_grants", "multi-quantum lookahead grants")
+        self.st_aligns = s.scalar(
+            "alignment_barriers", "classic run_until-style barriers")
+        self.st_msgs_out = s.scalar(
+            "pipe_msgs_sent", "messages coordinator -> workers")
+        self.st_msgs_in = s.scalar(
+            "pipe_msgs_recv", "messages workers -> coordinator")
+        self.st_arrival_rows = s.scalar(
+            "arrival_rows", "dcn arrival rows received (per clone class)")
+        self.st_completions = s.scalar(
+            "completion_rows", "dcn completion rows delivered")
+        self.st_elided = s.scalar(
+            "quanta_elided", "quantum boundaries crossed without a barrier")
+        self.sync_stats = s
+        #: wall-clock seconds per coordination phase (benchmark probe)
+        self.phase_wall: Dict[str, float] = {
+            "spawn": 0.0, "barrier_wait": 0.0, "collect": 0.0}
+
+    def sync_counters(self) -> Dict[str, int]:
+        """Plain-dict view of ``sync_stats`` (benchmarks, CI asserts)."""
+        return {name: int(st.value())
+                for name, st in self.sync_stats.stats().items()}
 
     # -- facade delegation ----------------------------------------------
     def __getattr__(self, name: str):
@@ -520,8 +652,6 @@ class ParallelEngine:
         n = f.machine.num_pods
         if self.workers <= 1 or n < 2:
             return None
-        if f.algorithm == "hierarchical":
-            return None                   # intra-pod cost reads num_pods
         if state is not None and (state.get("injected")
                                   or state.get("inject_floor")):
             return None                   # dynamic workload checkpoint
@@ -533,7 +663,20 @@ class ParallelEngine:
         return None                       # exact-tick dcn delivery
 
     # -- lifecycle: begin / restore ---------------------------------------
+    def _reset_lap(self) -> None:
+        """Per-lap coordinator state (the warm worker pool survives)."""
+        self._winfo = []
+        self._pending = []
+        self._t_now = 0
+        self._hwm = 0
+        self._aligned_to = 0
+        self._align_goal = 0
+        self._draining = False
+        self._collected = None
+        self._reset_lap_stats()
+
     def begin(self, trace: HloTrace) -> "ParallelEngine":
+        self._reset_lap()
         mode = self._parallel_plan(trace, None)
         if mode is None:
             self._mode = "serial"
@@ -546,6 +689,7 @@ class ParallelEngine:
 
     def restore(self, trace: HloTrace,
                 state: Dict[str, Any]) -> "ParallelEngine":
+        self._reset_lap()
         mode = self._parallel_plan(trace, state)
         if mode is None:
             self._mode = "serial"
@@ -588,8 +732,30 @@ class ParallelEngine:
         self._spawn(trace, state)
         return self
 
+    def _ensure_pool(self, nworkers: int) -> None:
+        """Spawn (or reuse) the warm worker pool: processes persist
+        across ``begin()``/``restore()`` laps — an ``init`` command
+        rebuilds the shard runtime in the existing process, skipping
+        the spawn-context interpreter+import cost per lap."""
+        if self._procs and len(self._procs) == nworkers \
+                and all(p.is_alive() for p in self._procs):
+            return
+        self.close()
+        ctx = mp.get_context(self.mp_context)
+        for _ in range(nworkers):
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(target=_worker_main, args=(child,),
+                               daemon=True)
+            proc.start()
+            child.close()
+            self._procs.append(proc)
+            self._conns.append(parent)
+        self._finalizer = weakref.finalize(self, _shutdown,
+                                           self._conns, self._procs)
+
     def _spawn(self, trace: HloTrace, state: Optional[Dict[str, Any]]
                ) -> None:
+        t0 = time.perf_counter()
         f = self._facade
         n = f.machine.num_pods
         if state is None:
@@ -599,15 +765,18 @@ class ParallelEngine:
                     for g in range(n)}
         machine_dict = f.machine.serialize()
         trace_json = trace.to_json()
-        ctx = mp.get_context(self.mp_context)
         shards = plan_shards(n, self.workers)
-        for shard in shards:
+        self._ensure_pool(len(shards))
+        self._wmembers = []
+        self._owner = {}
+        for widx, shard in enumerate(shards):
             reps, members = fold_pods(shard, keys)
             init = {
                 "machine": machine_dict,
                 "trace": trace_json,
                 "labels": reps,
                 "members": members,
+                "global_pods": n,
                 "slowdowns": [f.slow[g] for g in reps],
                 "algorithm": f.algorithm,
                 "timing": f.timing.name,
@@ -620,19 +789,16 @@ class ParallelEngine:
             if state is not None:
                 init["restore"] = _slice_state(state, reps,
                                                owns0=0 in shard)
-            parent, child = ctx.Pipe()
-            proc = ctx.Process(target=_worker_main, args=(child,),
-                               daemon=True)
-            proc.start()
-            child.close()
-            parent.send(init)
-            self._procs.append(proc)
-            self._conns.append(parent)
-        self._finalizer = weakref.finalize(self, _shutdown,
-                                           self._conns, self._procs)
+            self._conns[widx].send({"cmd": "init", "init": init})
+            self.st_msgs_out.inc()
+            self._wmembers.append([list(m) for m in members])
+            for i, mm in enumerate(members):
+                for g in mm:
+                    self._owner[g] = (widx, i)
         for i, conn in enumerate(self._conns):
             self._winfo.append(self._recv(conn, i))
-        dbg.dprintf("Parallel", "engine", "spawned %d workers mode=%s",
+        self.phase_wall["spawn"] += time.perf_counter() - t0
+        dbg.dprintf("Parallel", "engine", "launched %d workers mode=%s",
                     len(self._conns), self._mode, tick=self._t_now)
 
     def _recv(self, conn, i: int) -> Dict[str, Any]:
@@ -644,20 +810,39 @@ class ParallelEngine:
         if "error" in rep:
             raise RuntimeError(
                 f"parallel worker {i} failed:\n{rep['error']}")
+        self.st_msgs_in.inc()
         return rep
 
-    def _broadcast(self, cmd: Dict[str, Any]) -> List[Dict[str, Any]]:
+    def _broadcast(self, cmd: Dict[str, Any],
+                   phase: str = "barrier_wait") -> List[Dict[str, Any]]:
+        t0 = time.perf_counter()
         for conn in self._conns:
             conn.send(cmd)
-        return [self._recv(conn, i) for i, conn in enumerate(self._conns)]
+        self.st_msgs_out.inc(len(self._conns))
+        replies = [self._recv(conn, i)
+                   for i, conn in enumerate(self._conns)]
+        self.phase_wall[phase] += time.perf_counter() - t0
+        return replies
 
     # -- advance ----------------------------------------------------------
     def _merge_reply(self, i: int, rep: Dict[str, Any],
                      rows: List[Dict[str, Any]]) -> None:
         w = self._winfo[i]
         w.update(next_tick=rep["next_tick"], done=rep["done"],
-                 now=rep["now"], idle=rep["idle"])
-        rows.extend(rep["arrivals"])
+                 now=rep["now"], idle=rep["idle"],
+                 nexts=rep.get("nexts"), nows=rep.get("nows"))
+        hwm = int(rep.get("hwm", 0))
+        if hwm > self._hwm:
+            self._hwm = hwm
+        # expand per-clone-class arrival rows to their member pods (the
+        # wire carries one row per class; members share tick and seq)
+        self.st_arrival_rows.inc(len(rep["arrivals"]))
+        members = self._wmembers[i] if self._wmembers else None
+        for a in rep["arrivals"]:
+            for g in members[a["rep"]]:
+                row = dict(a)
+                row["pod"] = g
+                rows.append(row)
         if rep["markers"] and self._facade.op_hook is not None:
             ops = self._facade._trace.ops
             for idx, start, end in rep["markers"]:
@@ -672,13 +857,19 @@ class ParallelEngine:
 
     def _process_arrivals(self, rows: List[Dict[str, Any]]) -> None:
         """Replay ``DcnSim._on_arrive`` on the facade's fabric, in the
-        serial engine's canonical order: within a barrier the serial
-        ``_advance_to`` runs queue 0 fully, then queue 1, ... — i.e.
-        arrivals ordered by (global pod, per-pod event sequence)."""
+        serial engine's canonical order: serially, an arrival at tick
+        ``e`` happens in barrier round ``quantum_boundary(e)``, and
+        within a round ``_advance_to`` runs queue 0 fully, then queue 1,
+        ... — i.e. arrivals ordered by (round, global pod, per-pod event
+        sequence).  The round key matters under lookahead: one batched
+        grant can span many serial rounds, and two in-flight rendezvous
+        must complete in the serial (chronological) order because uplink
+        contention arithmetic is order-dependent."""
         f = self._facade
         dcn = f._dcn
         quantum = f.machine.quantum_ns
-        for a in sorted(rows, key=lambda a: (a["pod"], a["seq"])):
+        for a in sorted(rows, key=lambda a: (
+                quantum_boundary(a["ready"], quantum), a["pod"], a["seq"])):
             r = dcn._rendezvous.setdefault(
                 a["op"], {"arrived": 0, "first": a["ready"], "last": 0,
                           "waiters": []})
@@ -724,12 +915,83 @@ class ParallelEngine:
                                             "dur": dur,
                                             "deliver": deliver}))
 
-    def _barrier(self, t: int) -> None:
-        due = [c for d, c in self._pending if d <= t]
-        self._pending = [(d, c) for d, c in self._pending if d > t]
-        replies = self._broadcast({"cmd": "advance", "t": t,
-                                   "completions": due})
-        self._t_now = t
+    def _due(self, t: Optional[int]) -> List[Dict[str, Any]]:
+        """Pop pending completion deliveries with deliver <= t."""
+        if t is None:
+            due = [c for _, c in self._pending]
+            self._pending = []
+        else:
+            due = [c for d, c in self._pending if d <= t]
+            self._pending = [(d, c) for d, c in self._pending if d > t]
+        self.st_completions.inc(len(due))
+        return due
+
+    def _safe_horizon(self) -> Optional[int]:
+        """Largest tick every queue *holding undelivered arrivals* may
+        safely reach: the min over (a) exact pending delivery ticks and
+        (b) ``rendezvous_horizon`` of each incomplete rendezvous, seeded
+        with a lower bound on its final arrival (its last arrival so
+        far, and each missing pod's next event tick).  Every bound is an
+        under-estimate of the true delivery tick, so no bounded queue
+        can ever run past a delivery it has not seen.  ``None`` =
+        unbounded (no rendezvous in flight at all)."""
+        f = self._facade
+        quantum = f.machine.quantum_ns
+        pend_min = min((d for d, _ in self._pending), default=None)
+        bounds: List[int] = [] if pend_min is None else [pend_min]
+        for r in f._dcn._rendezvous.values():
+            arrived = {w["pod"] for w in r["waiters"]}
+            lb = r["last"]
+            for g in range(f.machine.num_pods):
+                if g in arrived:
+                    continue
+                widx, rep = self._owner[g]
+                w = self._winfo[widx]
+                nt = (w.get("nexts") or [None] * (rep + 1))[rep]
+                if nt is None:
+                    now = (w.get("nows") or [w["now"]] * (rep + 1))[rep]
+                    nt = now if pend_min is None else max(now, pend_min)
+                if nt > lb:
+                    lb = nt
+            bounds.append(rendezvous_horizon(lb, quantum))
+        return min(bounds) if bounds else None
+
+    def _grant(self, horizon: Optional[int],
+               limit: Optional[int]) -> bool:
+        """One batched lookahead round trip: ship due completions, let
+        every queue free-run (stop-at-arrival; ``horizon`` bounds
+        stash-holders, ``limit`` bounds everyone).  Returns whether any
+        simulation progress happened (events fired, arrivals captured,
+        or completions delivered)."""
+        cap = horizon
+        if limit is not None:
+            cap = limit if cap is None else min(cap, limit)
+        due = self._due(cap)
+        before = self._hwm
+        arrivals0 = int(self.st_arrival_rows.value())
+        replies = self._broadcast({"cmd": "advance", "completions": due,
+                                   "horizon": horizon, "limit": limit})
+        self.st_barriers.inc()
+        self.st_grants.inc()
+        self._after_barrier(replies)
+        if dbg._ACTIVE:
+            dbg.dprintf("Parallel", "engine",
+                        "grant horizon=%s limit=%s delivered=%d",
+                        horizon, limit, len(due), tick=self._hwm)
+        return (bool(due) or self._hwm > before
+                or int(self.st_arrival_rows.value()) > arrivals0)
+
+    def _align(self, t: int) -> None:
+        """Classic barrier: deliver due completions and run every queue
+        to ``t`` (the serial engine's ``_advance_to``) — used as the
+        no-progress fallback and to land queues on the exact serial
+        end-of-advance position before drain/snapshot."""
+        due = self._due(t)
+        replies = self._broadcast({"cmd": "advance", "completions": due,
+                                   "align": t})
+        self.st_barriers.inc()
+        self.st_aligns.inc()
+        self._t_now = max(self._t_now, t)
         self._after_barrier(replies)
         if dbg._ACTIVE:
             dbg.dprintf("Parallel", "engine", "barrier delivered=%d",
@@ -740,27 +1002,67 @@ class ParallelEngine:
 
     def _advance_sync(self, max_tick: Optional[int],
                       stop_check: Optional[Callable[[], bool]]) -> None:
-        """Coordinator-as-clock: the exact loop of
-        ``QuantumSync.run_until_drained``, with worker-reported next
-        ticks standing in for ``q.next_tick()``."""
+        """Coordinator-as-clock with dist-gem5 lookahead elision.
+
+        Instead of mirroring ``QuantumSync.run_until_drained`` barrier
+        for barrier, the coordinator issues multi-quantum *grants*: each
+        queue free-runs until it captures a new DCN arrival (at which
+        point it stops on its own — every rendezvous it could be party
+        to needs its arrival, and the delivery lands at least one
+        quantum later), bounded by ``_safe_horizon`` while it holds
+        undelivered traffic.  Exactness argument in docs/parallel.md:
+        every event fires at the same tick as serially, arrivals are
+        replayed in (round, pod, seq) order, and a final alignment
+        barrier lands all queues on the serial end-of-advance position
+        ``quantum_boundary(last fired tick)`` (clamped by the max_tick
+        of the advance call that fired it, exactly as the serial clamp
+        does)."""
         quantum = self._facade.machine.quantum_ns
-        t = (self._t_now // quantum) * quantum
+        hwm0, bar0 = self._hwm, int(self.st_barriers.value())
         while True:
             if stop_check is not None and stop_check():
-                return
+                self._update_align_goal(max_tick, quantum)
+                return                    # paused: no alignment yet
             upcoming = [w["next_tick"] for w in self._winfo
                         if w["next_tick"] is not None]
             if self._pending:
                 upcoming.append(min(d for d, _ in self._pending))
             if not upcoming:
-                return
+                break
             target = min(upcoming)
-            t = max(quantum_boundary(target, quantum), t + quantum)
-            if max_tick is not None and t > max_tick:
-                if target <= max_tick:
-                    self._barrier(max_tick)
-                return
-            self._barrier(t)
+            if max_tick is not None and target > max_tick:
+                break
+            if not self._grant(self._safe_horizon(), max_tick):
+                # conservative horizon pinned every queue below its next
+                # event: take one classic serial-schedule barrier.  It
+                # fires at least the earliest event, and it is always
+                # delivery-safe: any not-yet-computed completion's last
+                # arrival is an unfired event >= target, so its delivery
+                # lands >= quantum_boundary(target) + quantum > t.
+                self._align(quantum_boundary(target, quantum))
+        self._update_align_goal(max_tick, quantum)
+        if self._align_goal > self._aligned_to:
+            self._align(self._align_goal)
+            self._aligned_to = self._align_goal
+        crossed = (self._aligned_to - (hwm0 // quantum) * quantum) \
+            // quantum
+        executed = int(self.st_barriers.value()) - bar0
+        if crossed > executed:
+            self.st_elided.inc(crossed - executed)
+
+    def _update_align_goal(self, max_tick: Optional[int],
+                           quantum: int) -> None:
+        """Track the serial engine's end-of-advance queue position:
+        ``quantum_boundary(max tick fired)``, clamped by the max_tick of
+        the call in which those events fired (the serial loop's final
+        ``_advance_to(max_tick)`` clamp)."""
+        if self._hwm <= 0:
+            return
+        goal = quantum_boundary(self._hwm, quantum)
+        if max_tick is not None:
+            goal = min(goal, max_tick)
+        if goal > self._align_goal:
+            self._align_goal = goal
 
     def _advance_free(self, max_tick: Optional[int],
                       stop_check: Optional[Callable[[], bool]]) -> None:
@@ -829,11 +1131,18 @@ class ParallelEngine:
         """Pull worker shard state into the facade executor (expanding
         folded clones), after which the facade's own ``snapshot()`` /
         ``result()`` produce serial-format, serial-identical output.
-        Workers are released afterwards — a collected engine answers
-        any number of snapshot/result calls but cannot advance."""
+        The warm worker pool survives — a collected engine answers any
+        number of snapshot/result calls, cannot advance, but its next
+        ``begin()``/``restore()`` reuses the live processes."""
         if self._collected is not None:
             return
-        replies = self._broadcast({"cmd": "collect"})
+        # a run can end mid-grant (stop_check fired on the advance that
+        # fired the last event): land the deferred alignment barrier so
+        # collected queue positions match the serial engine's
+        if self._mode == "sync" and self._align_goal > self._aligned_to:
+            self._align(self._align_goal)
+            self._aligned_to = self._align_goal
+        replies = self._broadcast({"cmd": "collect"}, phase="collect")
         f = self._facade
         ins = f.instrument
         if ins is not None:
@@ -879,7 +1188,6 @@ class ParallelEngine:
         f._deferred = [(g, idx, ready) for _, g, idx, ready in deferred]
         f._ncomplete = sum(1 for row in f._op_end for e in row if e >= 0)
         self._collected = replies
-        self.close()
 
     # -- teardown ----------------------------------------------------------
     def close(self) -> None:
@@ -895,11 +1203,13 @@ class ParallelEngine:
 
     # -- one-shot ----------------------------------------------------------
     def execute(self, trace: HloTrace) -> ExecResult:
+        """Run a trace to completion.  Workers stay warm afterwards so
+        back-to-back laps on one engine skip the spawn cost; call
+        ``close()`` (or let ``run_parallel``'s finally do it) to tear
+        the pool down."""
         self.begin(trace)
         self.advance()
-        res = self.result()
-        self.close()
-        return res
+        return self.result()
 
     # -- dynamic workloads -------------------------------------------------
     def inject_op(self, op, ready: int, pod: int = 0) -> int:

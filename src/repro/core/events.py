@@ -55,6 +55,19 @@ def quantum_delivery(src_now: int, latency: int, quantum: int) -> int:
     return quantum_boundary(src_now + max(int(latency), quantum), quantum)
 
 
+def rendezvous_horizon(last_arrival_lb: int, quantum: int) -> int:
+    """Earliest tick an *incomplete* rendezvous could possibly deliver,
+    given a lower bound on its final arrival tick.
+
+    ``quantum_delivery`` floors every delivery at one quantum past the
+    last arrival, so any queue position ``<= rendezvous_horizon(lb)`` is
+    provably safe: the eventual delivery lands strictly later.  This is
+    the lookahead bound ``ParallelEngine`` uses to grant multi-quantum
+    advances (dist-gem5 barrier elision) without ever letting a queue
+    with undelivered traffic run past a delivery it has not seen."""
+    return quantum_delivery(int(last_arrival_lb), 0, quantum)
+
+
 class SimExit(Exception):
     """Raised by an event to stop the simulation (gem5's exit event)."""
 

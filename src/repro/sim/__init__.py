@@ -18,8 +18,9 @@ from repro.core.trace import (disable as disable_debug_flags,
                               enable as enable_debug_flags,
                               flag_context, flags as debug_flags)
 from repro.sim.boards import (BOARDS, Board, get_board, v5e_degraded,
-                              v5e_fleet, v5e_multipod, v5e_pod,
-                              v5e_serving, v5e_straggler, v5e_unreliable)
+                              v5e_fleet, v5e_fleet_big, v5e_multipod,
+                              v5e_pod, v5e_serving, v5e_straggler,
+                              v5e_unreliable)
 from repro.sim.ckptlib import (CheckpointLibrary, RegionTime,
                                board_digest, reconstruct, restore_fanout,
                                take_region_checkpoints, trace_digest)
@@ -52,7 +53,7 @@ from repro.sim.workloads import (DynamicWorkload, ServeRequest, ServeSim,
 __all__ = [
     "Board", "BOARDS", "get_board", "v5e_pod", "v5e_multipod",
     "v5e_straggler", "v5e_degraded", "v5e_serving", "v5e_fleet",
-    "v5e_unreliable",
+    "v5e_fleet_big", "v5e_unreliable",
     "Simulator", "ExitEvent", "ExitEventType", "SteadyStateWorkload",
     "repeat_trace",
     "DynamicWorkload", "ServeSim", "ServeRequest", "ServingCost",

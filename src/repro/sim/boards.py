@@ -180,6 +180,25 @@ def v5e_fleet(max_replicas: int = 8, nx: int = 8, ny: int = 8, *,
                  name=f"v5e_fleet_{max_replicas}x{nx}x{ny}")
 
 
+def v5e_fleet_big(num_pods: int = 64, quantum_ns: int = 100_000,
+                  nx: int = 4, ny: int = 4, *,
+                  chip: Optional[Dict] = None, ici: Optional[Dict] = None,
+                  dcn: Optional[Dict] = None,
+                  algorithm: str = "hierarchical",
+                  timing: str = "detailed") -> Board:
+    """Fleet-scale multipod (64-128 pods of small ``nx x ny`` slices)
+    joined by DCN under dist-gem5 quantum sync — the board the
+    ``ParallelEngine`` workers=8 scaling gate runs on (``tools/ci.sh
+    parallel``).  Slices are kept small so the per-pod event cost stays
+    cheap enough that coordinator overhead, not compute, is what the
+    benchmark measures; the default collective algorithm is
+    hierarchical, exercising the ``global_num_pods`` shard cost
+    context."""
+    m = _cluster("cluster", num_pods, quantum_ns, nx, ny, chip, ici, dcn)
+    return Board(m, algorithm=algorithm, timing=timing,
+                 name=f"v5e_fleet_big_{num_pods}")
+
+
 def v5e_unreliable(num_pods: int = 4, *, seed: int = 0,
                    horizon: int = 2000, mtbf: float = 400.0,
                    straggler_mtbs: float = 0.0,
@@ -210,6 +229,7 @@ BOARDS: Dict[str, Callable[..., Board]] = {
     "v5e_degraded": v5e_degraded,
     "v5e_serving": v5e_serving,
     "v5e_fleet": v5e_fleet,
+    "v5e_fleet_big": v5e_fleet_big,
     "v5e_unreliable": v5e_unreliable,
 }
 

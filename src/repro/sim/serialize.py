@@ -34,7 +34,13 @@ from repro.core.desim.executor import TraceExecutor
 from repro.core.desim.machine import ClusterModel
 from repro.core.desim.trace import HloTrace
 
-CHECKPOINT_VERSION = 1
+CHECKPOINT_VERSION = 2
+#: versions this reader still restores.  v2 is additive over v1 (new
+#: optional ``parallel_protocol`` header key recording which
+#: coordinator/worker wire protocol wrote the document — checkpoints
+#: themselves stay serial-format and worker-count-agnostic), so v1
+#: documents restore unchanged.
+SUPPORTED_CHECKPOINT_VERSIONS = (1, 2)
 CHECKPOINT_FORMAT = "repro.sim.checkpoint"
 
 # optional top-level key carrying a dynamic workload's state (pending
@@ -101,10 +107,12 @@ def machine_from_dict(d: Dict[str, Any]) -> ClusterModel:
 
 def checkpoint_executor(ex: TraceExecutor) -> Dict[str, Any]:
     """Serialize a drained executor (call ``ex.drain()`` first)."""
+    from repro.core.desim.parallel import PARALLEL_PROTOCOL
     state = ex.snapshot()          # raises unless drained
     return {
         "format": CHECKPOINT_FORMAT,
         "version": CHECKPOINT_VERSION,
+        "parallel_protocol": PARALLEL_PROTOCOL,
         "tick": state["tick"],
         "machine": machine_to_dict(ex.machine),
         "executor": {
@@ -144,10 +152,10 @@ def _check_header(ckpt: Dict[str, Any]) -> None:
         raise CheckpointError(
             f"not a {CHECKPOINT_FORMAT} document "
             f"(format={ckpt.get('format')!r})")
-    if ckpt.get("version") != CHECKPOINT_VERSION:
+    if ckpt.get("version") not in SUPPORTED_CHECKPOINT_VERSIONS:
         raise CheckpointError(
-            f"checkpoint version {ckpt.get('version')!r} != "
-            f"{CHECKPOINT_VERSION} (no migration registered)")
+            f"checkpoint version {ckpt.get('version')!r} not in "
+            f"{SUPPORTED_CHECKPOINT_VERSIONS} (no migration registered)")
 
 
 def trace_from_checkpoint(ckpt: Dict[str, Any]) -> HloTrace:

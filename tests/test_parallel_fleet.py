@@ -1,0 +1,273 @@
+"""Fleet-scale ParallelEngine: hierarchical collective sharding, the
+batched barrier/lookahead protocol, warm worker-pool reuse, and
+checkpoint format v2.
+
+The exactness bar is unchanged from ``test_parallel_engine.py`` (full
+ExecResult / snapshot equality with the serial engine); what is new
+here is *what* must be exact:
+
+* the ``hierarchical`` collective algorithm now runs sharded — a shard
+  machine prices DCN phases off ``global_num_pods`` (the cost context
+  ``ParallelEngine`` plants), so a worker holding 1 of N pods costs a
+  cross-pod all-reduce identically to the full machine,
+* the batched protocol's coordinator-local counters
+  (``ParallelEngine.sync_counters()``): pipe traffic is O(workers) per
+  barrier — not O(pods), not O(arrivals) — and lookahead elides the
+  empty quanta between DCN rendezvous,
+* worker processes stay warm across laps of one engine and die on
+  ``close()``,
+* checkpoints are stamped version 2 + ``parallel_protocol`` and v1
+  documents still restore.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.desim.collectives import HierarchicalAlgorithm
+from repro.core.desim.executor import TraceExecutor
+from repro.core.desim.machine import ClusterModel
+from repro.core.desim.parallel import PARALLEL_PROTOCOL, ParallelEngine
+from repro.core.desim.trace import analytic_trace
+from repro.sim import (CheckpointError, checkpoint_executor,
+                       restore_executor, run_parallel, v5e_multipod,
+                       v5e_straggler)
+from repro.sim.serialize import (CHECKPOINT_VERSION,
+                                 SUPPORTED_CHECKPOINT_VERSIONS)
+
+# a drain here lands INSIDE the tail DCN all-reduce's rendezvous on the
+# hierarchical straggler config below: pods 0-2 arrived, the 2x-slow
+# pod 3 has not (guard-asserted, so a cost-model change that moves the
+# window fails loudly instead of silently degrading the test)
+HIER_MID_RENDEZVOUS_TICK = 150_000_000
+
+
+def _trace(dcn_tails=1):
+    tails = [{"kind": "all-reduce", "bytes": 5e8 * (i + 1), "scope": "dcn"}
+             for i in range(dcn_tails)]
+    return analytic_trace(
+        "t", layers=6, layer_flops=2e12, layer_bytes=1e10,
+        layer_collectives=[{"kind": "all-reduce", "bytes": 2e8}],
+        tail_collectives=tails)
+
+
+def _hier_cfg(board):
+    return dict(algorithm="hierarchical",
+                straggler_slowdowns=board.straggler_slowdowns,
+                record_stats=True, timing="detailed")
+
+
+def _assert_equal_sans_events(got, ref):
+    for f in dataclasses.fields(ref):
+        if f.name == "events":
+            continue
+        assert getattr(got, f.name) == getattr(ref, f.name), f.name
+
+
+# ---------------------------------------------------------------------------
+# hierarchical collectives shard exactly
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_shard_machine_costs_globally():
+    """A 1-pod shard with ``global_num_pods=4`` prices a cross-pod
+    collective identically to the real 4-pod machine (the unit fact
+    the sharded run's bit-identity rests on)."""
+    full = ClusterModel("full", num_pods=4)
+    full.instantiate()
+    shard = ClusterModel("shard", num_pods=1, global_num_pods=4)
+    shard.instantiate()
+    assert shard.total_pods == 4
+    alg = HierarchicalAlgorithm()
+    chips = full.num_chips
+    for kind in ("all-reduce", "all-gather", "reduce-scatter"):
+        pf = alg.phases(kind, 1e9, chips, full)
+        ps = alg.phases(kind, 1e9, chips, shard)
+        assert [(p.name, p.time_s, p.bytes_on_wire) for p in pf] \
+            == [(p.name, p.time_s, p.bytes_on_wire) for p in ps]
+
+
+def test_hierarchical_parallel_identical():
+    board = v5e_multipod(num_pods=4, nx=4, ny=4)
+    board.algorithm = "hierarchical"
+    ref = board.executor(record_stats=True).execute(_trace())
+    got = run_parallel(board, _trace(), workers=2, record_stats=True)
+    assert got == ref                   # full ExecResult, stats included
+
+
+def test_hierarchical_straggler_parallel_identical():
+    board = v5e_straggler(num_pods=4, slowdown=2.0, nx=4, ny=4)
+    cfg = _hier_cfg(board)
+    ref = TraceExecutor(board.machine, **cfg).execute(_trace())
+    eng = ParallelEngine(board.machine, workers=3, **cfg)
+    try:
+        assert eng.execute(_trace()) == ref
+    finally:
+        eng.close()
+
+
+def test_hierarchical_mid_rendezvous_checkpoint_w4_to_w1():
+    """The ISSUE's hardest case: a checkpoint taken at workers=4 in the
+    middle of a hierarchical DCN rendezvous restores at workers=1."""
+    board = v5e_straggler(num_pods=4, slowdown=2.0, nx=4, ny=4)
+    cfg = _hier_cfg(board)
+    ref = TraceExecutor(board.machine, **cfg).execute(_trace())
+
+    # serial paused snapshot for the JSON-identity bar
+    es = TraceExecutor(board.machine, **cfg)
+    es.begin(_trace())
+    es.advance(max_tick=HIER_MID_RENDEZVOUS_TICK)
+    es.drain()
+    ssnap = es.snapshot()
+    assert ssnap["rendezvous"], \
+        "drain tick no longer lands mid-rendezvous"
+    arrived = {p for p, _ in ssnap["rendezvous"][0]["arrivals"]}
+    assert 0 < len(arrived) < board.machine.num_pods
+
+    eng = ParallelEngine(board.machine, workers=4, **cfg)
+    eng.begin(_trace())
+    eng.advance(max_tick=HIER_MID_RENDEZVOUS_TICK)
+    eng.drain()
+    ckpt = checkpoint_executor(eng)
+    psnap = eng.snapshot()
+    eng.close()
+    assert (json.dumps(psnap, sort_keys=True)
+            == json.dumps(ssnap, sort_keys=True))
+
+    # workers=1: restores into a plain serial executor
+    r1 = restore_executor(ckpt, machine=board.machine)
+    assert isinstance(r1, TraceExecutor)
+    r1.advance()
+    # and back under workers=2 for the restored-vs-restored bar
+    r2 = restore_executor(ckpt, machine=board.machine, workers=2)
+    r2.advance()
+    res2 = r2.result()
+    r2.close()
+    assert r1.result() == res2
+    _assert_equal_sans_events(r1.result(), ref)
+
+
+# ---------------------------------------------------------------------------
+# batched protocol: counters
+# ---------------------------------------------------------------------------
+
+def test_sync_counters_message_and_barrier_bounds():
+    """Pipe traffic is O(workers) per barrier and lookahead elides the
+    quanta between rendezvous: with quantum 100us and a ~200ms
+    makespan, ~2000 lockstep barriers collapse to a handful."""
+    board = v5e_multipod(num_pods=8, nx=4, ny=4, quantum_ns=100_000)
+    workers = 4
+    eng = board.executor(workers=workers, record_stats=True)
+    try:
+        res = eng.execute(_trace(dcn_tails=3))
+    finally:
+        eng.close()
+    c = eng.sync_counters()
+    dcn_colls = int(res.stats["sim.dcn.collectives"])
+    assert dcn_colls >= 3
+    # barrier elision: bounded by the rendezvous count, not the quantum
+    # count (the serial quantum walk here is makespan/quantum ~ 2000)
+    assert 0 < c["barriers"] <= 2 * dcn_colls + 4
+    assert c["quanta_elided"] > 10 * c["barriers"]
+    assert c["lookahead_grants"] + c["alignment_barriers"] \
+        == c["barriers"]
+    # one command per worker per round trip, one reply each — and only
+    # init + barriers + drain + collect round trips ever happen
+    assert c["pipe_msgs_sent"] == c["pipe_msgs_recv"]
+    assert c["pipe_msgs_sent"] <= (c["barriers"] + 3) * workers
+    # arrival rows ride the barrier replies batched per clone class:
+    # O(collectives x workers), strictly fewer than per-pod rows
+    assert 0 < c["arrival_rows"] <= dcn_colls * workers
+    assert c["arrival_rows"] < dcn_colls * board.machine.num_pods
+    assert c["completion_rows"] == dcn_colls
+    # the benchmark probe that rides along with the counters
+    assert eng.phase_wall["spawn"] > 0
+    assert eng.phase_wall["barrier_wait"] > 0
+
+
+def test_counters_reset_per_lap():
+    board = v5e_multipod(num_pods=4, nx=4, ny=4)
+    eng = board.executor(workers=2, record_stats=True)
+    try:
+        eng.execute(_trace())
+        first = eng.sync_counters()
+        eng.execute(_trace())
+        second = eng.sync_counters()
+    finally:
+        eng.close()
+    assert first["barriers"] > 0
+    # a fresh lap starts its counters from zero (not cumulative), and
+    # the same trace takes the same schedule
+    assert second["barriers"] == first["barriers"]
+    assert second["arrival_rows"] == first["arrival_rows"]
+
+
+# ---------------------------------------------------------------------------
+# warm worker pool
+# ---------------------------------------------------------------------------
+
+def test_warm_pool_reuses_processes_across_laps():
+    board = v5e_multipod(num_pods=4, nx=4, ny=4)
+    ref = board.executor(record_stats=True).execute(_trace())
+    eng = board.executor(workers=2, record_stats=True)
+    try:
+        res1 = eng.execute(_trace())
+        procs1 = list(eng._procs)
+        pids1 = [p.pid for p in procs1]
+        res2 = eng.execute(_trace())
+        pids2 = [p.pid for p in eng._procs]
+    finally:
+        eng.close()
+    assert res1 == ref and res2 == ref
+    assert pids1 == pids2               # same processes, not respawned
+    # teardown: close() really ends them
+    for p in procs1:
+        p.join(timeout=10)
+        assert not p.is_alive()
+
+
+def test_worker_count_change_respawns_pool():
+    board = v5e_straggler(num_pods=4, slowdown=2.0, nx=4, ny=4)
+    cfg = _hier_cfg(board)
+    ref = TraceExecutor(board.machine, **cfg).execute(_trace())
+    eng = ParallelEngine(board.machine, workers=4, **cfg)
+    try:
+        assert eng.execute(_trace()) == ref
+        eng.workers = 2                 # next lap shards differently
+        assert eng.execute(_trace()) == ref
+        assert len(eng._procs) == 2
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint format v2
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_v2_header_and_v1_compat():
+    board = v5e_multipod(num_pods=4, nx=4, ny=4)
+    eng = board.executor(workers=2, record_stats=True)
+    eng.begin(_trace())
+    eng.advance(max_tick=HIER_MID_RENDEZVOUS_TICK)
+    eng.drain()
+    ckpt = checkpoint_executor(eng)
+    eng.close()
+
+    assert CHECKPOINT_VERSION == 2
+    assert ckpt["version"] == 2
+    assert ckpt["parallel_protocol"] == PARALLEL_PROTOCOL
+
+    ref = restore_executor(ckpt, machine=board.machine)
+    ref.advance()
+
+    # a v1 document (no parallel_protocol key) still restores
+    v1 = dict(ckpt)
+    v1["version"] = 1
+    del v1["parallel_protocol"]
+    assert 1 in SUPPORTED_CHECKPOINT_VERSIONS
+    r1 = restore_executor(v1, machine=board.machine)
+    r1.advance()
+    assert r1.result() == ref.result()
+
+    with pytest.raises(CheckpointError, match="version"):
+        restore_executor(dict(ckpt, version=999))

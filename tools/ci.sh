@@ -28,8 +28,12 @@
 #                            # >= 2x faster wall-clock than the serial
 #                            # TraceExecutor on the 32-pod reference
 #                            # workload AND bit-exact (full ExecResult
-#                            # + stats-tree equality) — fails loudly if
-#                            # pod sharding / clone folding regresses
+#                            # + stats-tree equality) across two laps
+#                            # of one warm worker pool — then the
+#                            # fleet gate: workers=8 on the 64-pod
+#                            # v5e_fleet_big board >= 4x serial, bit-
+#                            # exact, with barriers bounded by the DCN
+#                            # collective count (lookahead elision)
 #   tools/ci.sh fleet        # autoscaled-serving tier: the flash-crowd
 #                            # lap (benchmarks/fleet_sweep.py
 #                            # --assert-fleet) — asserts the autoscaler
@@ -71,6 +75,7 @@ fi
 if [ "${1-}" = "parallel" ]; then
   shift
   python -m benchmarks.distgem5_scaling --assert-parallel 2
+  python -m benchmarks.distgem5_scaling --assert-parallel-big 4
   echo "parallel tier OK"
   exit 0
 fi
